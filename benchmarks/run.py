@@ -1,0 +1,139 @@
+"""Benchmark harness — one function per paper table/figure, plus kernel
+microbenchmarks. Prints ``name,us_per_call,derived`` CSV rows.
+
+  * table1_*  — Table I   dataflow access counts (llama2-7b GEMM set)
+  * fig8a/b   — Fig 8     DRAM-access / CIM-update reductions
+  * fig9a/b   — Fig 9     prefill / decode latency reductions
+  * table2_*  — Table II  TOPS, TOPS/W, prefill ms, decode tok/s
+  * kernel_*  — wall time of the jitted ops on CPU (indicative only; the
+                graded perf story is the dry-run roofline analysis)
+
+``us_per_call`` is the wall time of evaluating the row's underlying
+function (analytic rows are effectively free); ``derived`` carries the
+reproduced quantity and, where the paper publishes the same number, the
+paper value for side-by-side comparison.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dataflow import Dataflow, TileConfig, access_counts
+from repro.core.quant import QuantConfig, quantize_weight
+from repro.kernels import ref
+from repro.sim import perf_model as pm
+
+
+def _timeit(fn, n=3):
+    out = fn()
+    if hasattr(out, "block_until_ready"):
+        out.block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn()
+        if hasattr(out, "block_until_ready"):
+            out.block_until_ready()
+    return (time.perf_counter() - t0) / n * 1e6, out
+
+
+def _row(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def bench_table1() -> None:
+    """Table I: element access counts for each dataflow (representative
+    4096x4096 GEMM, M=1024 tokens, 128/256/256 tiles)."""
+    tc = TileConfig(M=1024, N=4096, K=4096, m=128, n=256, k=256)
+    for df in Dataflow:
+        us, c = _timeit(lambda df=df: access_counts(df, tc))
+        _row(f"table1_{df.value}", us,
+             f"in={c['input']};w={c['weight']};out={c['output']};"
+             f"upd={c['cim_update']}")
+
+
+def bench_fig8() -> None:
+    us, r = _timeit(pm.fig8a_dram_reduction)
+    _row("fig8a_dram_reduction", us,
+         f"repro={r['reduction']:.3f};paper={r['paper']}")
+    us, r = _timeit(pm.fig8b_update_reduction)
+    _row("fig8b_update_reduction", us,
+         f"repro={r['reduction']:.3f};paper={r['paper']}")
+
+
+def bench_fig9() -> None:
+    us, r = _timeit(pm.fig9a_prefill_reduction)
+    _row("fig9a_prefill_reduction", us,
+         f"repro={r['reduction']:.4f};paper={r['paper']};"
+         f"per_token_ms={r['per_token_ms']:.2f};paper_ms=4.2")
+    us, r = _timeit(pm.fig9b_decode_reductions)
+    _row("fig9b_rcw_reduction", us,
+         f"repro={r['rcw_reduction']:.4f};paper={r['paper_rcw']}")
+    _row("fig9b_fusion_reduction", 0.0,
+         f"repro={r['fusion_reduction']:.4f};paper={r['paper_fusion']}")
+    _row("fig9b_total_reduction", 0.0,
+         f"repro={r['total_reduction']:.4f};paper={r['paper_total']}")
+    _row("fig9b_decode_tokens_per_s", 0.0,
+         f"repro={r['tokens_per_s']:.2f};paper={r['paper_tokens_per_s']}")
+
+
+def bench_table2() -> None:
+    us, t = _timeit(pm.table2_summary)
+    _row("table2_throughput_tops", us,
+         f"repro={t['throughput_tops']:.2f};paper={t['paper_tops']}")
+    _row("table2_energy_eff", 0.0,
+         f"repro={t['energy_eff_tops_per_w']};paper={t['paper_tops_per_w']}")
+    _row("table2_prefill_ms", 0.0,
+         f"repro={t['prefill_per_token_ms']:.2f};paper=4.2")
+    _row("table2_decode_tok_s", 0.0,
+         f"repro={t['decode_tokens_per_s']:.2f};paper=26.87")
+    _row("table2_energy_per_token_mj", 0.0,
+         f"repro={t['energy_per_token_mj']:.2f}")
+
+
+def bench_kernels() -> None:
+    """Jitted op wall-times on CPU (ref lowering path, as the dry-run
+    lowers it off-TPU)."""
+    rng = np.random.default_rng(0)
+    M, N, K = 256, 1024, 1024
+    w = jnp.asarray(rng.standard_normal((N, K)).astype(np.float32))
+    qw = quantize_weight(w, QuantConfig("w4a8", 128))
+    x = jnp.asarray(rng.standard_normal((M, N)).astype(np.float32))
+
+    f = jax.jit(lambda x: ref.ws_ocs_matmul_ref(x, qw.data, qw.scale, bits=4))
+    us, _ = _timeit(lambda: f(x), n=10)
+    flops = 2 * M * N * K
+    _row("kernel_w4a8_matmul_1024", us, f"gflops={flops/us/1e3:.1f}")
+
+    xs = jnp.asarray(rng.standard_normal((64, 2048)).astype(np.float32))
+    g = jax.jit(lambda x: ref.group_softmax_ref(x, 64))
+    us, _ = _timeit(lambda: g(xs), n=10)
+    _row("kernel_group_softmax_64x2048", us,
+         f"gelem_s={64*2048/us/1e3:.2f}")
+
+    gamma = jnp.ones(2048)
+    h = jax.jit(lambda x: ref.group_rmsnorm_ref(x, gamma, 128))
+    us, _ = _timeit(lambda: h(xs), n=10)
+    _row("kernel_group_rmsnorm_64x2048", us,
+         f"gelem_s={64*2048/us/1e3:.2f}")
+
+    q = jnp.asarray(rng.standard_normal((1, 8, 256, 64)).astype(np.float32))
+    kv = jnp.asarray(rng.standard_normal((1, 2, 256, 64)).astype(np.float32))
+    a = jax.jit(lambda q, k, v: ref.attention_ref(q, k, v, causal=True))
+    us, _ = _timeit(lambda: a(q, kv, kv), n=10)
+    _row("kernel_attention_gqa_256", us, "oracle_path")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    bench_table1()
+    bench_fig8()
+    bench_fig9()
+    bench_table2()
+    bench_kernels()
+
+
+if __name__ == "__main__":
+    main()

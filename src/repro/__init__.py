@@ -1,0 +1,3 @@
+"""repro: RCW-CIM (read-compute/write DCIM LLM accelerator) reproduced as
+a multi-pod JAX/Pallas training + serving framework. See DESIGN.md."""
+__version__ = "0.1.0"

@@ -1,0 +1,11 @@
+"""Architecture configs: the 10 assigned archs + the paper's llama2-7b.
+Importing this package registers every arch with the registry."""
+from repro.configs import (  # noqa: F401
+    arctic_480b, chatglm3_6b, command_r_35b, dbrx_132b, falcon_mamba_7b,
+    llama2_7b, qwen2_72b, qwen2_vl_2b, recurrentgemma_2b, starcoder2_7b,
+    whisper_large_v3,
+)
+from repro.configs.base import (  # noqa: F401
+    SHAPES, ModelConfig, ShapeSpec, get_config, list_archs,
+    long_500k_supported,
+)

@@ -1,0 +1,28 @@
+"""arctic-480b [moe] — 35L d_model=7168 56H (GQA kv=8) d_ff=4864
+vocab=32000, MoE 128e top-2 + dense residual
+[hf:Snowflake/snowflake-arctic-base].
+
+Assumption (documented): the dense-residual FFN width is not given in the
+assignment; we use d_ff (4864), matching the expert width — the
+dense+MoE parallel-residual structure is what matters for the dataflow.
+"""
+from repro.configs.base import ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="arctic-480b", family="moe", num_layers=35, d_model=7168,
+        num_heads=56, num_kv_heads=8, d_ff=4864, vocab_size=32000,
+        rope_style="full", rope_theta=1e6, norm="rmsnorm", act="swiglu",
+        num_experts=128, num_experts_per_tok=2, moe_dense_ff=4864,
+    )
+
+
+def smoke() -> ModelConfig:
+    return full().replace(num_layers=2, d_model=128, num_heads=4,
+                          num_kv_heads=2, d_ff=64, vocab_size=512,
+                          num_experts=8, num_experts_per_tok=2,
+                          moe_dense_ff=64)
+
+
+register("arctic-480b", full, smoke)

@@ -1,0 +1,141 @@
+"""Model / run configuration system.
+
+``ModelConfig`` is the single source of truth a model family module needs;
+``ShapeSpec`` describes one assigned input-shape cell; ``registry`` maps
+``--arch`` ids to config constructors. Every assigned architecture file in
+this package instantiates the exact published dimensions and provides a
+``smoke()`` reduction of the same family for CPU tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # dense | moe | hybrid | ssm | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                 # 0 → d_model // num_heads
+    rope_style: str = "full"          # full | half | mrope | none
+    rope_theta: float = 1_000_000.0
+    norm: str = "rmsnorm"             # rmsnorm | layernorm
+    act: str = "swiglu"               # swiglu | gelu
+    qkv_bias: bool = False
+    parallel_block: bool = False      # command-r style attn ∥ mlp
+    tie_embeddings: bool = False
+    # --- MoE ---
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    moe_dense_ff: int = 0             # arctic's dense residual FFN width
+    capacity_factor: float = 1.25
+    moe_groups: int = 8               # GShard dispatch groups per batch
+    # --- SSM (mamba1) ---
+    ssm_state: int = 0
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0                  # 0 → ceil(d_model / 16)
+    # --- hybrid (recurrentgemma) ---
+    block_pattern: Tuple[str, ...] = ()   # e.g. ("R", "R", "A")
+    window: int = 0                   # local-attention window
+    rglru_c: float = 8.0
+    # --- enc-dec (whisper) ---
+    encoder_layers: int = 0
+    encoder_seq: int = 1500           # stub frontend frame count
+    # --- VLM (qwen2-vl) ---
+    mrope_sections: Tuple[int, ...] = ()
+    vision_patches: int = 256         # stub frontend patch count
+    # --- paper technique knobs ---
+    quant_mode: str = "bf16"          # w4a8 | w8a8 | bf16 (serving uses w4a8)
+    quant_group: int = 128
+    softmax_group: int = 64
+    norm_group: int = 128
+    use_lut_softmax: bool = False
+    use_fusion: bool = True           # group-norm/softmax fused ops on/off
+    dataflow: str = "ws_ocs"          # kernel/scheduler dataflow selection
+    rcw: bool = True                  # weight-stream overlap on/off
+    # --- numerics / compile ---
+    dtype: Any = jnp.bfloat16
+    scan_layers: bool = True
+    remat: bool = True
+    # --- sequence-parallel hint (long-context decode, batch=1) ---
+    seq_shard_axis: Optional[str] = None
+
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def d_inner(self) -> int:          # mamba
+        return self.expand * self.d_model
+
+    @property
+    def dt_rank_(self) -> int:
+        return self.dt_rank or -(-self.d_model // 16)
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim_
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim_
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str                         # train_4k | prefill_32k | decode_32k | long_500k
+    kind: str                         # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+# Archs whose every attention layer is full/global: a 500k dense-KV decode
+# is architecturally quadratic → the long_500k cell is skipped for them
+# (recorded in EXPERIMENTS.md). Sub-quadratic archs run it.
+LONG_CONTEXT_FAMILIES = ("ssm", "hybrid")
+
+
+def long_500k_supported(cfg: ModelConfig) -> bool:
+    return cfg.family in LONG_CONTEXT_FAMILIES
+
+
+_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
+_SMOKE: Dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register(name: str, full: Callable[[], ModelConfig],
+             smoke: Callable[[], ModelConfig]) -> None:
+    _REGISTRY[name] = full
+    _SMOKE[name] = smoke
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    import repro.configs  # noqa: F401  (registers all archs)
+    table = _SMOKE if smoke else _REGISTRY
+    if name not in table:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(table)}")
+    return table[name]()
+
+
+def list_archs() -> Tuple[str, ...]:
+    import repro.configs  # noqa: F401
+    return tuple(sorted(_REGISTRY))

@@ -1,0 +1,21 @@
+"""chatglm3-6b [dense] — 28L d_model=4096 32H (GQA kv=2) d_ff=13696
+vocab=65024 — RoPE 2d (rotary on half of head_dim), GQA
+[arXiv:2406.12793; hf]."""
+from repro.configs.base import ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="chatglm3-6b", family="dense", num_layers=28, d_model=4096,
+        num_heads=32, num_kv_heads=2, d_ff=13696, vocab_size=65024,
+        rope_style="half", rope_theta=1e4, norm="rmsnorm", act="swiglu",
+        qkv_bias=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return full().replace(num_layers=2, d_model=128, num_heads=4,
+                          num_kv_heads=2, d_ff=256, vocab_size=512)
+
+
+register("chatglm3-6b", full, smoke)

@@ -1,0 +1,21 @@
+"""command-r-35b [dense] — 40L d_model=8192 64H (GQA kv=8) d_ff=22528
+vocab=256000 — GQA, no-bias [hf:CohereForAI/c4ai-command-r-v01].
+Cohere uses LayerNorm and a parallel attn∥mlp residual block."""
+from repro.configs.base import ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="command-r-35b", family="dense", num_layers=40, d_model=8192,
+        num_heads=64, num_kv_heads=8, d_ff=22528, vocab_size=256000,
+        rope_style="full", rope_theta=8e6, norm="layernorm", act="swiglu",
+        qkv_bias=False, parallel_block=True, tie_embeddings=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return full().replace(num_layers=2, d_model=128, num_heads=4,
+                          num_kv_heads=2, d_ff=256, vocab_size=512)
+
+
+register("command-r-35b", full, smoke)

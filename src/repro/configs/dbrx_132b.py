@@ -1,0 +1,21 @@
+"""dbrx-132b [moe] — 40L d_model=6144 48H (GQA kv=8) d_ff=10752
+vocab=100352, MoE 16e top-4, fine-grained [hf:databricks/dbrx-base]."""
+from repro.configs.base import ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="dbrx-132b", family="moe", num_layers=40, d_model=6144,
+        num_heads=48, num_kv_heads=8, d_ff=10752, vocab_size=100352,
+        rope_style="full", rope_theta=5e5, norm="layernorm", act="swiglu",
+        num_experts=16, num_experts_per_tok=4,
+    )
+
+
+def smoke() -> ModelConfig:
+    return full().replace(num_layers=2, d_model=128, num_heads=4,
+                          num_kv_heads=2, d_ff=128, vocab_size=512,
+                          num_experts=4, num_experts_per_tok=2)
+
+
+register("dbrx-132b", full, smoke)

@@ -1,0 +1,23 @@
+"""falcon-mamba-7b [ssm] — 64L d_model=4096 (attn-free) vocab=65024,
+ssm_state=16, mamba1 arch [arXiv:2410.05355].
+
+The paper's group-softmax fusion is inapplicable (no softmax attention);
+built without it — see DESIGN.md §Arch-applicability."""
+from repro.configs.base import ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="falcon-mamba-7b", family="ssm", num_layers=64, d_model=4096,
+        num_heads=1, num_kv_heads=1, d_ff=0, vocab_size=65024,
+        rope_style="none", norm="rmsnorm", ssm_state=16, d_conv=4,
+        expand=2,
+    )
+
+
+def smoke() -> ModelConfig:
+    return full().replace(num_layers=2, d_model=128, vocab_size=512,
+                          ssm_state=4)
+
+
+register("falcon-mamba-7b", full, smoke)

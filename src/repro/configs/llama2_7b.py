@@ -1,0 +1,26 @@
+"""llama2-7b — the paper's own evaluation model (Table II): 32L
+d_model=4096 32H (MHA) d_ff=11008 vocab=32000; INT4 weights / INT8
+activations / FP16 nonlinear in the serving configuration."""
+from repro.configs.base import ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="llama2-7b", family="dense", num_layers=32, d_model=4096,
+        num_heads=32, num_kv_heads=32, d_ff=11008, vocab_size=32000,
+        rope_style="full", rope_theta=1e4, norm="rmsnorm", act="swiglu",
+    )
+
+
+def serving() -> ModelConfig:
+    """The paper's deployment config: W4A8 + LUT softmax + fusion."""
+    return full().replace(quant_mode="w4a8", use_lut_softmax=True,
+                          use_fusion=True, dataflow="ws_ocs", rcw=True)
+
+
+def smoke() -> ModelConfig:
+    return full().replace(num_layers=2, d_model=128, num_heads=4,
+                          num_kv_heads=4, d_ff=256, vocab_size=512)
+
+
+register("llama2-7b", full, smoke)

@@ -1,0 +1,20 @@
+"""qwen2-72b [dense] — 80L d_model=8192 64H (GQA kv=8) d_ff=29568
+vocab=152064 — GQA, QKV bias [arXiv:2407.10671; hf]."""
+from repro.configs.base import ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-72b", family="dense", num_layers=80, d_model=8192,
+        num_heads=64, num_kv_heads=8, d_ff=29568, vocab_size=152064,
+        rope_style="full", rope_theta=1e6, norm="rmsnorm", act="swiglu",
+        qkv_bias=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return full().replace(num_layers=2, d_model=128, num_heads=4,
+                          num_kv_heads=2, d_ff=256, vocab_size=512)
+
+
+register("qwen2-72b", full, smoke)

@@ -1,0 +1,24 @@
+"""qwen2-vl-2b [vlm] — 28L d_model=1536 12H (GQA kv=2) d_ff=8960
+vocab=151936 — M-RoPE (sections t=16, h=24, w=24 over head_dim/2=64),
+dynamic-resolution vision frontend STUBBED per task spec
+[arXiv:2409.12191; hf]."""
+from repro.configs.base import ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-2b", family="vlm", num_layers=28, d_model=1536,
+        num_heads=12, num_kv_heads=2, d_ff=8960, vocab_size=151936,
+        rope_style="mrope", rope_theta=1e6, norm="rmsnorm", act="swiglu",
+        qkv_bias=True, mrope_sections=(16, 24, 24), vision_patches=256,
+        tie_embeddings=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return full().replace(num_layers=2, d_model=128, num_heads=4,
+                          num_kv_heads=2, d_ff=256, vocab_size=512,
+                          mrope_sections=(8, 4, 4), vision_patches=16)
+
+
+register("qwen2-vl-2b", full, smoke)

@@ -1,0 +1,23 @@
+"""recurrentgemma-2b [hybrid] — 26L d_model=2560 10H (GQA kv=1) d_ff=7680
+vocab=256000 — RG-LRU + local attn, pattern (R,R,A) [arXiv:2402.19427].
+head_dim=256 (10 heads × 256 = 2560); local window 2048."""
+from repro.configs.base import ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma-2b", family="hybrid", num_layers=26,
+        d_model=2560, num_heads=10, num_kv_heads=1, d_ff=7680,
+        vocab_size=256000, head_dim=256, rope_style="full", rope_theta=1e4,
+        norm="rmsnorm", act="swiglu", block_pattern=("R", "R", "A"),
+        window=2048, tie_embeddings=True, scan_layers=False,
+    )
+
+
+def smoke() -> ModelConfig:
+    return full().replace(num_layers=3, d_model=128, num_heads=4,
+                          num_kv_heads=1, head_dim=32, d_ff=256,
+                          vocab_size=512, window=32)
+
+
+register("recurrentgemma-2b", full, smoke)

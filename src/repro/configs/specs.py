@@ -1,0 +1,66 @@
+"""ShapeDtypeStruct input specs for every (arch × shape) dry-run cell.
+
+``input_specs(cfg, shape)`` returns (step_kind, kwargs-of-structs) — the
+exact abstract arguments the corresponding jitted step function is lowered
+with. No device memory is ever allocated (the shannon/kernels pattern).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import api
+
+I32 = jnp.int32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    """Abstract cache pytree via eval_shape (no allocation)."""
+    return jax.eval_shape(lambda: api.init_cache(cfg, batch, max_len))
+
+
+def train_batch_specs(cfg: ModelConfig, batch: int, seq: int) -> Dict:
+    specs = {"tokens": _sds((batch, seq), I32),
+             "labels": _sds((batch, seq), I32)}
+    if cfg.family == "audio":
+        specs["frames"] = _sds((batch, cfg.encoder_seq, cfg.d_model),
+                               cfg.dtype)
+    if cfg.family == "vlm":
+        P = cfg.vision_patches
+        specs["vision_embeds"] = _sds((batch, P, cfg.d_model), cfg.dtype)
+        specs["positions"] = _sds((3, batch, seq + P), I32)
+    return specs
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[str, Dict]:
+    """→ (step_kind, kwargs) where step_kind ∈ train|prefill|decode and
+    kwargs are the abstract args for that step (excluding params)."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return "train", {"batch": train_batch_specs(cfg, B, S)}
+    if shape.kind == "prefill":
+        batch = {"tokens": _sds((B, S), I32)}
+        if cfg.family == "audio":
+            batch["frames"] = _sds((B, cfg.encoder_seq, cfg.d_model),
+                                   cfg.dtype)
+        cache_len = S
+        if cfg.family == "vlm":
+            P = cfg.vision_patches
+            batch["vision_embeds"] = _sds((B, P, cfg.d_model), cfg.dtype)
+            batch["positions"] = _sds((3, B, S + P), I32)
+            cache_len = S + P      # merged vision+text sequence
+        return "prefill", {"batch": batch,
+                           "cache": cache_specs(cfg, B, cache_len)}
+    # decode: one new token against a cache of seq_len
+    return "decode", {
+        "token": _sds((B, 1), I32),
+        "cache": cache_specs(cfg, B, S),
+        "pos_idx": _sds((), I32),
+    }

@@ -1,0 +1,21 @@
+"""starcoder2-7b [dense] — 32L d_model=4608 36H (GQA kv=4) d_ff=18432
+vocab=49152 — GQA, RoPE [arXiv:2402.19173; hf]. StarCoder2 uses
+LayerNorm + GELU MLP + biases."""
+from repro.configs.base import ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="starcoder2-7b", family="dense", num_layers=32, d_model=4608,
+        num_heads=36, num_kv_heads=4, d_ff=18432, vocab_size=49152,
+        rope_style="full", rope_theta=1e5, norm="layernorm", act="gelu",
+        qkv_bias=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return full().replace(num_layers=2, d_model=144, num_heads=6,
+                          num_kv_heads=2, d_ff=288, vocab_size=512)
+
+
+register("starcoder2-7b", full, smoke)

@@ -1,0 +1,26 @@
+"""whisper-large-v3 [audio] — 32L d_model=1280 20H (kv=20) d_ff=5120
+vocab=51866 — enc-dec, conv frontend STUBBED per task spec
+[arXiv:2212.04356]. 32 encoder + 32 decoder layers (whisper-large);
+LayerNorm, GELU, learned decoder positions, tied embeddings; 1500
+encoder frames. Decode shapes are lowered with the assigned 32k KV
+geometry (shapes-only dry-run; see DESIGN.md §4)."""
+from repro.configs.base import ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-large-v3", family="audio", num_layers=32,
+        d_model=1280, num_heads=20, num_kv_heads=20, d_ff=5120,
+        vocab_size=51866, rope_style="none", norm="layernorm", act="gelu",
+        qkv_bias=True, encoder_layers=32, encoder_seq=1500,
+        tie_embeddings=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return full().replace(num_layers=2, encoder_layers=2, d_model=128,
+                          num_heads=4, num_kv_heads=4, d_ff=256,
+                          vocab_size=512, encoder_seq=64)
+
+
+register("whisper-large-v3", full, smoke)

@@ -1,0 +1,10 @@
+"""The paper's primary contribution as composable JAX modules.
+
+* :mod:`repro.core.dataflow` — IS/WS/IS-OS/WS-OS/WS-OCS schedules and the
+  Table-I access-count model.
+* :mod:`repro.core.rcw` — read-compute/write overlap timing model.
+* :mod:`repro.core.fusion` — LUT-64 group softmax, group RMS/LayerNorm,
+  online-softmax attention (framework-level references for the kernels).
+* :mod:`repro.core.quant` — INT4/INT8 quantization substrate.
+"""
+from repro.core import dataflow, fusion, quant, rcw  # noqa: F401

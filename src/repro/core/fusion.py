@@ -1,0 +1,216 @@
+"""Nonlinear operator fusion (paper §II-D), framework level.
+
+Implements the paper's two fused nonlinear operators in pure jnp. The
+Pallas kernels in ``repro.kernels`` reproduce these bit-for-bit (tested);
+model code calls through ``repro.kernels.ops`` which dispatches.
+
+* ``group_softmax`` — eq (1): a 64-segment piecewise-linear LUT replaces
+  exp; inputs are offset by the *group* max (killing the global-max
+  dependency); per-group partial sums ("partial accumulation") are merged
+  online into the global denominator ("full accumulation").
+* ``group_rmsnorm`` — eq (2): per-group partial Σx² with the global-RMS
+  synchronization deferred and fused into the γ-scaling pass. The result
+  is numerically the standard (global) RMSNorm — the grouping is a
+  *latency* optimization, which the sim/ model accounts for.
+* ``group_layernorm`` — the analogous group-stat + late-sync LayerNorm for
+  archs that use LN (command-r, starcoder2, whisper). See DESIGN.md §4.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# 64-segment piecewise-linear exp LUT
+# ---------------------------------------------------------------------------
+
+LUT_SEGMENTS = 64
+LUT_LO = -16.0  # exp(-16) ≈ 1.1e-7: below fp16 softmax significance
+LUT_HI = 0.0
+
+
+def build_exp_lut(segments: int = LUT_SEGMENTS, lo: float = LUT_LO,
+                  hi: float = LUT_HI):
+    """Per-segment (a, b) with exp(x) ≈ a·x + b on [lo, hi], chords through
+    segment endpoints (max error e^hi·w²/8 at segment centers). Built in
+    numpy so cached/global LUTs are trace-safe constants (never tracers)."""
+    import numpy as np
+    edges = np.linspace(lo, hi, segments + 1, dtype=np.float32)
+    e = np.exp(edges)
+    a = (e[1:] - e[:-1]) / (edges[1:] - edges[:-1])
+    b = e[:-1] - a * edges[:-1]
+    return jnp.asarray(a), jnp.asarray(b)
+
+
+import numpy as _np
+
+_edges = _np.linspace(LUT_LO, LUT_HI, LUT_SEGMENTS + 1, dtype=_np.float32)
+_e = _np.exp(_edges)
+_LUT_A_NP = (_e[1:] - _e[:-1]) / (_edges[1:] - _edges[:-1])
+_LUT_B_NP = _e[:-1] - _LUT_A_NP * _edges[:-1]
+
+
+def _default_lut():
+    # numpy constants lifted to jnp at call time: embeds as a trace
+    # constant (never a cached tracer) and supports tracer indexing
+    return jnp.asarray(_LUT_A_NP), jnp.asarray(_LUT_B_NP)
+
+
+def lut_exp(x: jax.Array, lut: Optional[Tuple[jax.Array, jax.Array]] = None,
+            lo: float = LUT_LO, hi: float = LUT_HI) -> jax.Array:
+    """Piecewise-linear exp(x) for x ≤ 0. Values below ``lo`` flush to an
+    exact 0 — the paper's underflow guard (exp(-16) ≈ 1.1e-7 is below
+    FP16 softmax significance)."""
+    a, b = lut if lut is not None else _default_lut()
+    segments = a.shape[0]
+    xf = x.astype(jnp.float32)
+    xc = jnp.clip(xf, lo, hi)
+    seg_w = (hi - lo) / segments
+    idx = jnp.clip(((xc - lo) / seg_w).astype(jnp.int32), 0, segments - 1)
+    y = a[idx] * xc + b[idx]
+    return jnp.where(xf < lo, 0.0, y)
+
+
+# ---------------------------------------------------------------------------
+# Group softmax (eq 1)
+# ---------------------------------------------------------------------------
+
+def group_softmax(x: jax.Array, group_size: int = 64, use_lut: bool = True,
+                  where: Optional[jax.Array] = None) -> jax.Array:
+    """Softmax over the last axis, evaluated in groups of ``group_size``.
+
+    Per group: offset by group max, LUT-exp ("partial accumulation" — all
+    groups exponentiate in parallel), per-group sum; groups are then merged
+    online (log-sum-exp algebra) and the normalization is fused into the
+    final scale. With exact exp this is bit-equivalent to softmax; with
+    the LUT it matches the paper's approximation.
+    """
+    orig_dtype = x.dtype
+    n = x.shape[-1]
+    g = min(group_size, n)
+    pad = (-n) % g
+    xf = x.astype(jnp.float32)
+    if where is not None:
+        xf = jnp.where(where, xf, -jnp.inf)
+    if pad:
+        xf = jnp.pad(xf, [(0, 0)] * (x.ndim - 1) + [(0, pad)],
+                     constant_values=-jnp.inf)
+    G = xf.shape[-1] // g
+    xg = xf.reshape(xf.shape[:-1] + (G, g))
+
+    exp = lut_exp if use_lut else jnp.exp
+    m_g = jnp.max(xg, axis=-1, keepdims=True)               # group max
+    m_g_safe = jnp.where(jnp.isfinite(m_g), m_g, 0.0)       # all-masked group
+    p = exp(xg - m_g_safe)                                   # partial accum
+    p = jnp.where(jnp.isfinite(xg), p, 0.0)
+    s_g = jnp.sum(p, axis=-1, keepdims=True)                 # full accum
+
+    m = jnp.max(m_g, axis=-2, keepdims=True)                 # online merge
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    r = exp(m_g_safe - m_safe) * jnp.where(jnp.isfinite(m_g), 1.0, 0.0)
+    denom = jnp.sum(s_g * r, axis=-2, keepdims=True)
+    out = p * r / jnp.maximum(denom, 1e-30)
+
+    out = out.reshape(xf.shape)
+    if pad:
+        out = out[..., :n]
+    return out.astype(orig_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Group RMSNorm (eq 2) and group LayerNorm
+# ---------------------------------------------------------------------------
+
+def group_rmsnorm(x: jax.Array, gamma: jax.Array, group_size: int = 128,
+                  eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with per-group partial Σx² and the global-RMS sync fused
+    into the γ scale (eq 2 + the paper's late-sync refinement)."""
+    orig_dtype = x.dtype
+    n = x.shape[-1]
+    g = min(group_size, n)
+    assert n % g == 0, (n, g)
+    xf = x.astype(jnp.float32)
+    xg = xf.reshape(xf.shape[:-1] + (n // g, g))
+    partial_ms = jnp.mean(jnp.square(xg), axis=-1)           # per-group stat
+    global_ms = jnp.mean(partial_ms, axis=-1, keepdims=True)  # late sync
+    inv = jax.lax.rsqrt(global_ms + eps)                      # fused w/ γ
+    out = xf * inv * gamma.astype(jnp.float32)
+    return out.astype(orig_dtype)
+
+
+def group_layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+                    group_size: int = 128, eps: float = 1e-5) -> jax.Array:
+    """LayerNorm via per-group partial (Σx, Σx²) merged late — the
+    paper's group-stat idea applied to LN archs (DESIGN.md §4)."""
+    orig_dtype = x.dtype
+    n = x.shape[-1]
+    g = min(group_size, n)
+    assert n % g == 0, (n, g)
+    xf = x.astype(jnp.float32)
+    xg = xf.reshape(xf.shape[:-1] + (n // g, g))
+    s1 = jnp.sum(xg, axis=-1)
+    s2 = jnp.sum(jnp.square(xg), axis=-1)
+    mean = jnp.sum(s1, axis=-1, keepdims=True) / n
+    var = jnp.sum(s2, axis=-1, keepdims=True) / n - jnp.square(mean)
+    inv = jax.lax.rsqrt(var + eps)
+    out = (xf - mean) * inv * gamma.astype(jnp.float32) + beta.astype(jnp.float32)
+    return out.astype(orig_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Online-softmax attention reference (ties eq 1 to the flash kernel)
+# ---------------------------------------------------------------------------
+
+def online_softmax_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                             causal: bool = True, use_lut: bool = False,
+                             scale: Optional[float] = None,
+                             block_k: int = 128) -> jax.Array:
+    """O(S) -memory attention: KV is consumed in blocks with running
+    (max, denom, acc) state — the paper's online-softmax regime [7] that
+    the group-softmax fusion accelerates. Shapes: q (B,H,Sq,D), k/v
+    (B,H,Sk,D)."""
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    scale = scale if scale is not None else D ** -0.5
+    exp = lut_exp if use_lut else jnp.exp
+    qf = q.astype(jnp.float32) * scale
+    nblk = -(-Sk // block_k)
+    padk = nblk * block_k - Sk
+
+    kf = jnp.pad(k.astype(jnp.float32), ((0, 0), (0, 0), (0, padk), (0, 0)))
+    vf = jnp.pad(v.astype(jnp.float32), ((0, 0), (0, 0), (0, padk), (0, 0)))
+    kb = kf.reshape(B, H, nblk, block_k, D)
+    vb = vf.reshape(B, H, nblk, block_k, D)
+
+    q_pos = jnp.arange(Sq)[:, None]
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kblk, vblk, start = blk
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kblk)
+        kpos = start + jnp.arange(block_k)[None, :]
+        mask = kpos < Sk
+        if causal:
+            mask = mask & (kpos <= q_pos + (Sk - Sq))
+        s = jnp.where(mask, s, -jnp.inf)
+        m_blk = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m, m_blk)
+        m_new_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = exp(s - m_new_safe)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), exp(m - m_new_safe), 0.0)
+        l_new = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * corr + jnp.einsum("bhqk,bhkd->bhqd", p, vblk)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, Sq, 1), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq, 1), jnp.float32)
+    acc0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+    starts = jnp.arange(nblk) * block_k
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0),
+        (jnp.moveaxis(kb, 2, 0), jnp.moveaxis(vb, 2, 0), starts))
+    return (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)

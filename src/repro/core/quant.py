@@ -1,0 +1,147 @@
+"""Quantization substrate: symmetric INT4 / INT8 with per-channel or
+per-group scales, and nibble packing for INT4 weight storage.
+
+The paper runs Llama2-7B with INT4 weights / INT8 activations / FP16
+nonlinear functions. On TPU there is no native INT4 MAC mode, so INT4
+weights are stored nibble-packed (two values per uint8) — preserving the
+paper's *traffic and residency* economics — and dequantized to int8/bf16 at
+the MXU boundary inside the kernel (see DESIGN.md §8.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+INT4_MIN, INT4_MAX = -8, 7
+INT8_MIN, INT8_MAX = -128, 127
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """How a tensor class is quantized.
+
+    mode: "w4a8" (paper default), "w8a8", or "bf16" (no quantization).
+    group_size: contraction-dim group size for weight scales; None means
+        per-output-channel scales.
+    """
+
+    mode: str = "w4a8"
+    group_size: Optional[int] = 128
+
+    @property
+    def weight_bits(self) -> int:
+        return {"w4a8": 4, "w8a8": 8, "bf16": 16}[self.mode]
+
+    @property
+    def act_bits(self) -> int:
+        return {"w4a8": 8, "w8a8": 8, "bf16": 16}[self.mode]
+
+
+def _absmax_scale(x: jax.Array, axis, qmax: int) -> jax.Array:
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    return jnp.maximum(amax, 1e-8) / qmax
+
+
+def quantize_int8(x: jax.Array, axis=-1):
+    """Symmetric per-axis int8 quantization. Returns (q:int8, scale:f32)."""
+    scale = _absmax_scale(x.astype(jnp.float32), axis, INT8_MAX)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), INT8_MIN, INT8_MAX)
+    return q.astype(jnp.int8), scale
+
+
+def quantize_int4(x: jax.Array, axis=0, group_size: Optional[int] = None):
+    """Symmetric int4 quantization of a 2D weight (N, K) along the
+    contraction axis ``axis`` (=0), optionally in groups of ``group_size``
+    rows sharing one scale per output column.
+
+    Returns (q:int8 in [-8,7], scale:f32 broadcastable to x).
+    """
+    x = x.astype(jnp.float32)
+    if group_size is None:
+        scale = _absmax_scale(x, axis, INT4_MAX)
+    else:
+        n = x.shape[axis]
+        assert n % group_size == 0, (n, group_size)
+        g = n // group_size
+        xg = x.reshape(x.shape[:axis] + (g, group_size) + x.shape[axis + 1 :])
+        sg = _absmax_scale(xg, axis + 1, INT4_MAX)  # (..., g, 1, ...)
+        scale = jnp.broadcast_to(sg, xg.shape).reshape(x.shape)
+    q = jnp.clip(jnp.round(x / scale), INT4_MIN, INT4_MAX)
+    return q.astype(jnp.int8), scale
+
+
+def group_scales(x: jax.Array, group_size: int, axis: int = 0) -> jax.Array:
+    """Compact (G, K) scale tensor for a (N, K) weight with N//group_size
+    groups (used by the Pallas kernel, which broadcasts in-kernel)."""
+    x = x.astype(jnp.float32)
+    n = x.shape[axis]
+    assert n % group_size == 0
+    xg = x.reshape((n // group_size, group_size) + x.shape[1:])
+    return _absmax_scale(xg, 1, INT4_MAX)[:, 0]  # (G, K)
+
+
+def pack_int4(q: jax.Array, axis: int = 0) -> jax.Array:
+    """Pack int4 values (stored as int8 in [-8,7]) two-per-byte along
+    ``axis``. Even indices go to the low nibble."""
+    assert q.shape[axis] % 2 == 0
+    u = (q.astype(jnp.int32) & 0xF).astype(jnp.uint8)
+    lo = jax.lax.slice_in_dim(u, 0, u.shape[axis], stride=2, axis=axis)
+    hi = jax.lax.slice_in_dim(u, 1, u.shape[axis], stride=2, axis=axis)
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_int4(p: jax.Array, axis: int = 0) -> jax.Array:
+    """Inverse of :func:`pack_int4` → int8 values in [-8, 7]."""
+    lo = (p & 0xF).astype(jnp.int8)
+    hi = ((p >> 4) & 0xF).astype(jnp.int8)
+    # sign-extend 4-bit two's complement
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    stacked = jnp.stack([lo, hi], axis=axis + 1)  # (..., n/2, 2, ...)
+    shape = list(p.shape)
+    shape[axis] = shape[axis] * 2
+    return stacked.reshape(shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedWeight:
+    """An INT4/INT8 quantized (N, K) weight ready for the WS-OCS kernel.
+
+    For w4: ``data`` is uint8 (N//2, K) nibble-packed along N.
+    For w8: ``data`` is int8 (N, K).
+    ``scale`` is f32 (G, K) with G = N // group_size (or (1, K))."""
+
+    data: jax.Array
+    scale: jax.Array
+    bits: int
+    group_size: int
+    shape: tuple  # logical (N, K)
+
+    def dequantize(self) -> jax.Array:
+        q = unpack_int4(self.data, axis=0) if self.bits == 4 else self.data
+        n, k = self.shape
+        g = self.scale.shape[0]
+        sf = jnp.repeat(self.scale, n // g, axis=0)
+        return q.astype(jnp.float32) * sf
+
+
+def quantize_weight(w: jax.Array, cfg: QuantConfig) -> QuantizedWeight:
+    """Quantize a (N, K) weight per ``cfg`` (contraction dim = 0)."""
+    n, k = w.shape
+    gs = cfg.group_size or n
+    if n % gs != 0:  # fall back to per-channel when groups don't divide
+        gs = n
+    if cfg.weight_bits == 4:
+        scale = group_scales(w, gs)
+        sf = jnp.repeat(scale, gs, axis=0)
+        q = jnp.clip(jnp.round(w.astype(jnp.float32) / sf), INT4_MIN, INT4_MAX)
+        return QuantizedWeight(pack_int4(q.astype(jnp.int8), axis=0), scale, 4, gs, (n, k))
+    elif cfg.weight_bits == 8:
+        scale = _absmax_scale(w.astype(jnp.float32), 0, INT8_MAX)
+        q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), INT8_MIN, INT8_MAX)
+        return QuantizedWeight(q.astype(jnp.int8), scale.reshape(1, k), 8, n, (n, k))
+    raise ValueError(f"no quantized storage for {cfg.mode}")

@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for the paper's compute hot-spots, with pure-jnp
+oracles (ref.py) and dispatching wrappers (ops.py)."""
+from repro.kernels import ops, ref  # noqa: F401

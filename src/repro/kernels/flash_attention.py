@@ -1,0 +1,135 @@
+"""Online-softmax (flash) attention Pallas kernel.
+
+The paper adopts online softmax [7] to remove the global max/denominator
+dependency; this kernel is its TPU form: KV is consumed in (block_k × D)
+tiles with running (m, ℓ, acc) state in VMEM scratch, so attention memory
+is O(block) instead of O(S²). Supports causal masking, GQA (KV-head
+sharing via the BlockSpec index map), local-window attention (for
+recurrentgemma), and the paper's 64-segment LUT exp mode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.fusion import LUT_HI, LUT_LO, LUT_SEGMENTS, build_exp_lut
+from repro.kernels.group_softmax import _lut_exp_block
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, ab_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale, causal, window, use_lut, sq, sk, bq, bk):
+    qi, ki = pl.program_id(1), pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # ---- causal block-level skip: block fully in the masked future ----
+    q_last = qi * bq + bq - 1 + (sk - sq)    # largest key this block sees
+    k_first = ki * bk
+    run = jnp.logical_or(not causal, k_first <= q_last)
+    if window is not None:
+        q_first = qi * bq + (sk - sq)
+        k_last = ki * bk + bk - 1
+        run = jnp.logical_and(run, k_last > q_first - window)
+
+    @pl.when(run)
+    def _():
+        q = q_ref[0].astype(jnp.float32) * scale           # (bq, D)
+        k = k_ref[0].astype(jnp.float32)                   # (bk, D)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+
+        qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) \
+            + (sk - sq)
+        kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < sk
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window is not None:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        s = jnp.where(mask, s, _NEG)
+
+        m_prev = m_ref[:, :1]                               # (bq, 1)
+        m_blk = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_blk)
+        if use_lut:
+            p = _lut_exp_block(s - m_new, ab_ref, LUT_LO, LUT_HI)
+            corr = _lut_exp_block(m_prev - m_new, ab_ref, LUT_LO, LUT_HI)
+        else:
+            p = jnp.exp(s - m_new)
+            corr = jnp.exp(m_prev - m_new)
+        p = jnp.where(mask, p, 0.0)
+        l_new = l_ref[:, :1] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr \
+            + jnp.dot(p, v_ref[0].astype(jnp.float32),
+                      preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ki == nk - 1)
+    def _():
+        l = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    scale: Optional[float] = None, use_lut: bool = False,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q (B, H, Sq, D); k/v (B, Hkv, Sk, D), Hkv | H. Returns (B, H, Sq, D).
+
+    Sequence lengths must be divisible by the block sizes (callers pad;
+    the in-kernel ``kpos < sk`` mask makes KV padding safe)."""
+    B, H, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    scale = scale if scale is not None else D ** -0.5
+
+    q3 = q.reshape(B * H, Sq, D)
+    k3 = k.reshape(B * Hkv, Sk, D)
+    v3 = v.reshape(B * Hkv, Sk, D)
+
+    def kv_head(h):
+        return (h // H) * Hkv + (h % H) // rep
+
+    a, b = build_exp_lut()
+    ab = jnp.stack([a, b], axis=1)
+
+    kern = functools.partial(_kernel, scale=scale, causal=causal,
+                             window=window, use_lut=use_lut, sq=Sq, sk=Sk,
+                             bq=bq, bk=bk)
+    out = pl.pallas_call(
+        kern,
+        grid=(B * H, Sq // bq, Sk // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda h, qi, ki: (h, qi, 0)),
+            pl.BlockSpec((1, bk, D), lambda h, qi, ki: (kv_head(h), ki, 0)),
+            pl.BlockSpec((1, bk, D), lambda h, qi, ki: (kv_head(h), ki, 0)),
+            pl.BlockSpec((LUT_SEGMENTS, 2), lambda h, qi, ki: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda h, qi, ki: (h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 128), jnp.float32),   # running max (lane-bcast)
+            pltpu.VMEM((bq, 128), jnp.float32),   # running denom
+            pltpu.VMEM((bq, D), jnp.float32),     # running accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(q3, k3, v3, ab)
+    return out.reshape(B, H, Sq, D)

@@ -1,0 +1,88 @@
+"""Group-RMSNorm / group-LayerNorm Pallas kernels (paper §II-D, eq 2).
+
+Per row: per-group partial statistics (Σx², and Σx for the LN variant) are
+computed in parallel, merged to the global statistic late, and the
+normalization is applied *fused with the γ (and β) scaling* in the same
+VMEM-resident pass — the paper's "synchronization together with γ scaling".
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rms_kernel(x_ref, g_ref, o_ref, *, group_size, eps):
+    br, n = x_ref.shape
+    G = n // group_size
+    x = x_ref[...].astype(jnp.float32)
+    xg = x.reshape(br, G, group_size)
+    partial_ms = jnp.mean(jnp.square(xg), axis=-1)      # per-group stat
+    global_ms = jnp.mean(partial_ms, axis=-1, keepdims=True)  # late sync
+    inv = jax.lax.rsqrt(global_ms + eps)
+    o_ref[...] = (x * inv * g_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def _ln_kernel(x_ref, g_ref, b_ref, o_ref, *, group_size, eps):
+    br, n = x_ref.shape
+    G = n // group_size
+    x = x_ref[...].astype(jnp.float32)
+    xg = x.reshape(br, G, group_size)
+    s1 = jnp.sum(xg, axis=-1)
+    s2 = jnp.sum(jnp.square(xg), axis=-1)
+    mean = jnp.sum(s1, axis=-1, keepdims=True) / n
+    var = jnp.sum(s2, axis=-1, keepdims=True) / n - jnp.square(mean)
+    inv = jax.lax.rsqrt(var + eps)
+    out = (x - mean) * inv * g_ref[...].astype(jnp.float32) \
+        + b_ref[...].astype(jnp.float32)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def _run(kernel, x, scale_args, block_rows, interpret):
+    orig_shape = x.shape
+    n = orig_shape[-1]
+    rows = 1
+    for d in orig_shape[:-1]:
+        rows *= d
+    x2 = x.reshape(rows, n)
+    br = min(block_rows, rows)
+    assert rows % br == 0, (rows, br)
+    in_specs = [pl.BlockSpec((br, n), lambda r: (r, 0))]
+    args = [x2]
+    for s in scale_args:
+        in_specs.append(pl.BlockSpec((1, n), lambda r: (0, 0)))
+        args.append(s.reshape(1, n))
+    out = pl.pallas_call(
+        kernel,
+        grid=(rows // br,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((br, n), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, n), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(*args)
+    return out.reshape(orig_shape)
+
+
+def group_rmsnorm(x: jax.Array, gamma: jax.Array, group_size: int = 128,
+                  eps: float = 1e-6, block_rows: int = 8,
+                  interpret: bool = False) -> jax.Array:
+    n = x.shape[-1]
+    g = min(group_size, n)
+    assert n % g == 0, (n, g)
+    k = functools.partial(_rms_kernel, group_size=g, eps=eps)
+    return _run(k, x, [gamma], block_rows, interpret)
+
+
+def group_layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+                    group_size: int = 128, eps: float = 1e-5,
+                    block_rows: int = 8, interpret: bool = False) -> jax.Array:
+    n = x.shape[-1]
+    g = min(group_size, n)
+    assert n % g == 0, (n, g)
+    k = functools.partial(_ln_kernel, group_size=g, eps=eps)
+    return _run(k, x, [gamma, beta], block_rows, interpret)

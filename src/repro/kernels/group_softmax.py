@@ -1,0 +1,91 @@
+"""Group-Softmax Pallas kernel with 64-segment LUT exp (paper §II-D, eq 1).
+
+One pass over a row block computes, per group of ``group_size`` elements:
+the group max (offset — kills the global-max dependency), the LUT-exp of
+every element ("partial accumulation": all groups exponentiate in
+parallel on the VPU), and the per-group sum ("full accumulation"); groups
+are then merged online and the normalization is fused into the final
+scale.
+
+The LUT lookup is realized as a one-hot × (64, 2) coefficient matmul on
+the MXU — the TPU analogue of the CIM array storing (a, b) per segment and
+selecting a row by wordline activation (DESIGN.md §8.4).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.fusion import LUT_HI, LUT_LO, LUT_SEGMENTS, build_exp_lut
+
+
+def _lut_exp_block(x: jax.Array, ab_ref, lo: float, hi: float) -> jax.Array:
+    """Piecewise-linear exp via one-hot matmul against the (64, 2) LUT
+    (the TPU analogue of CIM wordline-selected coefficients). Underflow
+    below ``lo`` flushes to an exact 0, matching ``fusion.lut_exp``."""
+    segments = ab_ref.shape[0]
+    xc = jnp.clip(x, lo, hi)
+    seg_w = (hi - lo) / segments
+    idx = jnp.clip(((xc - lo) / seg_w).astype(jnp.int32), 0, segments - 1)
+    flat = idx.reshape(-1, 1)
+    onehot = (flat == jax.lax.broadcasted_iota(jnp.int32, (1, segments), 1))
+    ab = jnp.dot(onehot.astype(jnp.float32), ab_ref[...],
+                 preferred_element_type=jnp.float32)   # (n, 2)
+    a = ab[:, 0].reshape(x.shape)
+    b = ab[:, 1].reshape(x.shape)
+    return jnp.where(x < lo, 0.0, a * xc + b)
+
+
+def _kernel(x_ref, ab_ref, o_ref, *, group_size, lo, hi):
+    br, s = x_ref.shape
+    g = group_size
+    G = s // g
+    x = x_ref[...].astype(jnp.float32)
+    xg = x.reshape(br, G, g)
+    m_g = jnp.max(xg, axis=-1, keepdims=True)                 # group max
+    p = _lut_exp_block(xg - m_g, ab_ref, lo, hi)              # partial acc
+    s_g = jnp.sum(p, axis=-1, keepdims=True)                  # full acc
+    m = jnp.max(m_g, axis=-2, keepdims=True)                  # online merge
+    r = _lut_exp_block(m_g - m, ab_ref, lo, hi)
+    denom = jnp.sum(s_g * r, axis=-2, keepdims=True)
+    out = p * r / jnp.maximum(denom, 1e-30)
+    o_ref[...] = out.reshape(br, s).astype(o_ref.dtype)
+
+
+def group_softmax(x: jax.Array, group_size: int = 64, block_rows: int = 8,
+                  interpret: bool = False) -> jax.Array:
+    """Softmax over the last axis of ``x`` (any leading dims) in groups of
+    ``group_size``, LUT-exp approximation. Last dim must be divisible by
+    ``group_size`` (model code pads; see ops.py)."""
+    orig_shape = x.shape
+    s = orig_shape[-1]
+    g = min(group_size, s)
+    assert s % g == 0, (s, g)
+    rows = 1
+    for d in orig_shape[:-1]:
+        rows *= d
+    x2 = x.reshape(rows, s)
+    br = min(block_rows, rows)
+    assert rows % br == 0, (rows, br)
+
+    a, b = build_exp_lut()
+    ab = jnp.stack([a, b], axis=1)  # (64, 2)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, group_size=g, lo=LUT_LO, hi=LUT_HI),
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, s), lambda r: (r, 0)),
+            pl.BlockSpec((LUT_SEGMENTS, 2), lambda r: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, s), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, s), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(x2, ab)
+    return out.reshape(orig_shape)

@@ -1,0 +1,78 @@
+"""Fused elementwise linear-recurrence Pallas kernel: h_t = a_t⊙h_{t−1} + b_t.
+
+The RG-LRU (recurrentgemma) and any gated elementwise recurrence lower to
+this primitive. Like ``selective_scan``, the within-tile associative scan
+runs entirely in VMEM with the running state carried in scratch across
+sequence tiles, so HBM sees only a, b, and y once each — the log-depth
+scan intermediates never hit HBM (the memory term of the hybrid train
+cell in EXPERIMENTS.md §Roofline).
+
+Grid: (B, D/bd, S/bs), sequence innermost ("arbitrary").
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _combine(x, y):
+    a1, b1 = x
+    a2, b2 = y
+    return a1 * a2, a2 * b1 + b2
+
+
+def _kernel(a_ref, b_ref, h0_ref, o_ref, hout_ref, h_ref):
+    si = pl.program_id(2)
+    ns = pl.num_programs(2)
+
+    @pl.when(si == 0)
+    def _():
+        h_ref[...] = h0_ref[...].astype(jnp.float32)
+
+    a = a_ref[0].astype(jnp.float32)      # (bs, bd)
+    b = b_ref[0].astype(jnp.float32)
+    b = b.at[0].add(a[0] * h_ref[0])      # fold the carried state
+    _, hs = jax.lax.associative_scan(_combine, (a, b), axis=0)
+    h_ref[...] = hs[-1:]
+    o_ref[0] = hs.astype(o_ref.dtype)
+
+    @pl.when(si == ns - 1)
+    def _():
+        hout_ref[...] = h_ref[...]
+
+
+def linear_recurrence_kernel(a: jax.Array, b: jax.Array, h0: jax.Array, *,
+                             block_s: int = 128, block_d: int = 256,
+                             interpret: bool = False
+                             ) -> Tuple[jax.Array, jax.Array]:
+    """a, b: (B, S, D); h0: (B, D). Returns (h (B,S,D) f32, h_last (B,D))."""
+    B, S, D = a.shape
+    bs = min(block_s, S)
+    bd = min(block_d, D)
+    assert S % bs == 0 and D % bd == 0, (S, bs, D, bd)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=(B, D // bd, S // bs),
+        in_specs=[
+            pl.BlockSpec((1, bs, bd), lambda bi, d, s: (bi, s, d)),
+            pl.BlockSpec((1, bs, bd), lambda bi, d, s: (bi, s, d)),
+            pl.BlockSpec((1, bd), lambda bi, d, s: (bi, d)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bs, bd), lambda bi, d, s: (bi, s, d)),
+            pl.BlockSpec((1, bd), lambda bi, d, s: (bi, d)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, D), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, bd), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(a, b, h0)

@@ -1,0 +1,131 @@
+"""Public jit'd wrappers for the Pallas kernels, with backend dispatch.
+
+On TPU the real ``pallas_call`` lowers; on CPU/GPU the pure-jnp oracle
+(``ref.py``) is used so the whole framework (models, trainer, serving,
+dry-run) runs everywhere. ``REPRO_FORCE_PALLAS=1`` (or
+``force_pallas(True)``) routes through the kernels in interpret mode —
+how the kernel test-suite executes them on this CPU container.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import selective_scan as _ss
+from repro.kernels import group_rmsnorm as _gr
+from repro.kernels import group_softmax as _gs
+from repro.kernels import ref
+from repro.kernels import ws_ocs_matmul as _mm
+
+_FORCE: Optional[bool] = None
+
+
+def force_pallas(on: Optional[bool]) -> None:
+    """Override dispatch: True → pallas (interpret off-TPU), False → ref,
+    None → auto (pallas iff on TPU)."""
+    global _FORCE
+    _FORCE = on
+
+
+def _use_pallas() -> bool:
+    if _FORCE is not None:
+        return _FORCE
+    if os.environ.get("REPRO_FORCE_PALLAS") == "1":
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+
+def ws_ocs_matmul(x, w_data, w_scale, *, bits=4, x_scale=None,
+                  bm=128, bk=128, rcw=True):
+    """Quantized panel-stationary matmul (see ws_ocs_matmul.py)."""
+    if _use_pallas():
+        if rcw and x_scale is None:
+            return _mm.rcw_matmul(x, w_data, w_scale, bits=bits, bm=bm,
+                                  bk=bk, rcw=True, interpret=_interpret())
+        out = _mm.ws_ocs_matmul(x, w_data, w_scale, bits=bits,
+                                x_scale=x_scale, bm=bm, bk=bk,
+                                interpret=_interpret())
+        return out
+    return ref.ws_ocs_matmul_ref(x, w_data, w_scale, bits=bits,
+                                 x_scale=x_scale)
+
+
+def group_softmax(x, group_size=64, use_lut=True):
+    if _use_pallas() and use_lut and x.shape[-1] % min(group_size, x.shape[-1]) == 0:
+        rows = 1
+        for d in x.shape[:-1]:
+            rows *= d
+        br = 8 if rows % 8 == 0 else 1
+        return _gs.group_softmax(x, group_size=group_size, block_rows=br,
+                                 interpret=_interpret())
+    return ref.group_softmax_ref(x, group_size=group_size, use_lut=use_lut)
+
+
+def group_rmsnorm(x, gamma, group_size=128, eps=1e-6):
+    if _use_pallas():
+        rows = 1
+        for d in x.shape[:-1]:
+            rows *= d
+        br = 8 if rows % 8 == 0 else 1
+        return _gr.group_rmsnorm(x, gamma, group_size=group_size, eps=eps,
+                                 block_rows=br, interpret=_interpret())
+    return ref.group_rmsnorm_ref(x, gamma, group_size=group_size, eps=eps)
+
+
+def group_layernorm(x, gamma, beta, group_size=128, eps=1e-5):
+    if _use_pallas():
+        rows = 1
+        for d in x.shape[:-1]:
+            rows *= d
+        br = 8 if rows % 8 == 0 else 1
+        return _gr.group_layernorm(x, gamma, beta, group_size=group_size,
+                                   eps=eps, block_rows=br,
+                                   interpret=_interpret())
+    return ref.group_layernorm_ref(x, gamma, beta, group_size=group_size,
+                                   eps=eps)
+
+
+def attention(q, k, v, *, causal=True, window=None, use_lut=False,
+              scale=None, block_q=128, block_k=128):
+    """Multi-head attention; flash kernel on TPU; off-TPU: the O(S)-memory
+    flash-scan oracle for long sequences (REPRO_OPT_FLASH=1 — the §Perf
+    memory-term optimization), else the exact materialized oracle."""
+    Sq, Sk = q.shape[2], k.shape[2]
+    if _use_pallas() and Sq % min(block_q, Sq) == 0 \
+            and Sk % min(block_k, Sk) == 0:
+        return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                                   use_lut=use_lut, scale=scale,
+                                   block_q=block_q, block_k=block_k,
+                                   interpret=_interpret())
+    from repro.parallel.flags import opt
+    if opt("FLASH") and Sk >= 2048:
+        return ref.flash_attention_scan_ref(
+            q, k, v, causal=causal, window=window, use_lut=use_lut,
+            scale=scale)
+    return ref.attention_ref(q, k, v, causal=causal, window=window,
+                             use_lut=use_lut, scale=scale)
+
+
+def selective_scan(dt, xs, bm, cm, a_log, h0, *, block_s=64, block_d=128):
+    """Fused selective scan (mamba): VMEM-resident recurrence kernel on
+    TPU (O(S·(d+state)) HBM traffic — EXPERIMENTS.md §Perf); jnp oracle
+    elsewhere. Returns (y, h_last)."""
+    B, S, D = dt.shape
+    if _use_pallas() and S % min(block_s, S) == 0 \
+            and D % min(block_d, D) == 0:
+        return _ss.selective_scan(dt, xs, bm, cm, a_log, h0,
+                                  block_s=min(block_s, S),
+                                  block_d=min(block_d, D),
+                                  interpret=_interpret())
+    return _ss.selective_scan_ref(dt, xs, bm, cm, a_log, h0)

@@ -1,0 +1,146 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` matches its kernel's semantics exactly (same LUT algebra,
+same accumulation dtype) so tests can ``assert_allclose`` across shape /
+dtype sweeps. These are also the lowering path used on non-TPU backends
+(see ``ops.py``), so they are written to fuse well under XLA.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fusion
+from repro.core.quant import unpack_int4
+
+
+def dequant_weight_ref(w_data: jax.Array, w_scale: jax.Array, bits: int,
+                       out_dtype=jnp.float32) -> jax.Array:
+    """(N, K) float weight from packed int4 (N//2, K) or int8 (N, K) data
+    with (G, K) group scales."""
+    q = unpack_int4(w_data, axis=0) if bits == 4 else w_data
+    n = q.shape[0]
+    g = w_scale.shape[0]
+    sf = jnp.repeat(w_scale, n // g, axis=0)
+    return (q.astype(jnp.float32) * sf).astype(out_dtype)
+
+
+def ws_ocs_matmul_ref(x: jax.Array, w_data: jax.Array, w_scale: jax.Array,
+                      bits: int = 4, x_scale: Optional[jax.Array] = None,
+                      out_dtype=jnp.float32) -> jax.Array:
+    """out[M,K] = dequant(x) @ dequant(w). ``x`` may be int8 (with
+    per-row ``x_scale`` (M,1)) or float."""
+    w = dequant_weight_ref(w_data, w_scale, bits)
+    xf = x.astype(jnp.float32)
+    out = jnp.dot(xf, w, preferred_element_type=jnp.float32)
+    if x_scale is not None:
+        out = out * x_scale.astype(jnp.float32)
+    return out.astype(out_dtype)
+
+
+def group_softmax_ref(x: jax.Array, group_size: int = 64,
+                      use_lut: bool = True) -> jax.Array:
+    return fusion.group_softmax(x, group_size=group_size, use_lut=use_lut)
+
+
+def group_rmsnorm_ref(x: jax.Array, gamma: jax.Array, group_size: int = 128,
+                      eps: float = 1e-6) -> jax.Array:
+    return fusion.group_rmsnorm(x, gamma, group_size=group_size, eps=eps)
+
+
+def group_layernorm_ref(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+                        group_size: int = 128, eps: float = 1e-5) -> jax.Array:
+    return fusion.group_layernorm(x, gamma, beta, group_size=group_size, eps=eps)
+
+
+def flash_attention_scan_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                             causal: bool = True,
+                             window: Optional[int] = None,
+                             use_lut: bool = False,
+                             scale: Optional[float] = None,
+                             block_k: int = 1024) -> jax.Array:
+    """O(S)-memory online-softmax attention with native GQA: KV heads are
+    never repeated; q is grouped (B, Hkv, G, Sq, D) and KV consumed in
+    blocks with running (m, l, acc) state. This is the non-TPU lowering
+    path for long sequences (the memory-roofline fix in EXPERIMENTS.md
+    §Perf) and mirrors the Pallas flash kernel's algebra."""
+    from repro.core import fusion
+    B, H, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    G = H // Hkv
+    s_ = scale if scale is not None else D ** -0.5
+    exp = fusion.lut_exp if use_lut else jnp.exp
+    qg = (q.astype(jnp.float32) * s_).reshape(B, Hkv, G, Sq, D)
+
+    nblk = -(-Sk // block_k)
+    padk = nblk * block_k - Sk
+    kf = jnp.pad(k.astype(jnp.float32), ((0, 0), (0, 0), (0, padk), (0, 0)))
+    vf = jnp.pad(v.astype(jnp.float32), ((0, 0), (0, 0), (0, padk), (0, 0)))
+    kb = jnp.moveaxis(kf.reshape(B, Hkv, nblk, block_k, D), 2, 0)
+    vb = jnp.moveaxis(vf.reshape(B, Hkv, nblk, block_k, D), 2, 0)
+    starts = jnp.arange(nblk) * block_k
+    qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kblk, vblk, start = blk
+        sc = jnp.einsum("bkgqd,bkcd->bkgqc", qg, kblk)
+        kpos = start + jnp.arange(block_k)[None, :]
+        mask = kpos < Sk
+        if causal:
+            mask = mask & (kpos <= qpos)
+        if window is not None:
+            mask = mask & (kpos > qpos - window)
+        sc = jnp.where(mask, sc, -1e30)
+        m_blk = jnp.max(sc, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m, m_blk)
+        p = exp(sc - m_new)
+        p = jnp.where(mask, p, 0.0)
+        corr = exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * corr + jnp.einsum("bkgqc,bkcd->bkgqd", p, vblk)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, G, Sq, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq, 1), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Sq, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, starts))
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.reshape(B, H, Sq, D).astype(q.dtype)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True, window: Optional[int] = None,
+                  use_lut: bool = False, scale: Optional[float] = None) -> jax.Array:
+    """Exact (materialized-scores) attention. q (B,H,Sq,D); k/v (B,Hkv,Sk,D)
+    with Hkv | H (GQA). ``window``: local attention half-width (keys with
+    qpos - kpos >= window masked)."""
+    B, H, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    if Hkv != H:
+        rep = H // Hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    s = scale if scale is not None else D ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * s
+    qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits, -jnp.inf)
+    if use_lut:
+        m = jnp.max(logits, axis=-1, keepdims=True)
+        m = jnp.where(jnp.isfinite(m), m, 0.0)
+        p = fusion.lut_exp(logits - m)
+        p = jnp.where(mask, p, 0.0)
+        probs = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        probs = jnp.where(mask, probs, 0.0)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,117 @@
+"""Fused selective-scan (Mamba-1) Pallas kernel.
+
+The jnp lowering of the selective scan materializes (B, S, d_inner,
+state) f32 decay/update tensors in HBM — 16× the token volume (state=16)
+and the dominant memory term of the falcon-mamba train cell
+(EXPERIMENTS.md §Perf). This kernel applies the paper's core discipline —
+*keep the working set in compute-coupled memory* — to the SSM: the
+(bs × bd × st) recurrence tensors are constructed, scanned, and consumed
+entirely in VMEM; HBM sees only the (B, S, ·) inputs, the (B, S, bd)
+output, and the (B, D, N) entry/exit states. Traffic drops from
+O(S·d·st) to O(S·(d + st)).
+
+Layout: grid = (B, d_inner/bd, S/bs) with the sequence dim innermost
+("arbitrary" semantics); the running state h (bd, st) persists in VMEM
+scratch across sequence tiles — the exact analogue of the WS-OCS
+partial-sum buffer.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _combine(x, y):
+    a1, b1 = x
+    a2, b2 = y
+    return a1 * a2, a2 * b1 + b2
+
+
+def _kernel(dt_ref, xs_ref, bm_ref, cm_ref, a_log_ref, h0_ref,
+            o_ref, hout_ref, h_ref):
+    si = pl.program_id(2)
+    ns = pl.num_programs(2)
+
+    @pl.when(si == 0)
+    def _():
+        h_ref[...] = h0_ref[0].astype(jnp.float32)
+
+    dt = dt_ref[0].astype(jnp.float32)            # (bs, bd)
+    xs = xs_ref[0].astype(jnp.float32)            # (bs, bd)
+    bm = bm_ref[0].astype(jnp.float32)            # (bs, st)
+    cm = cm_ref[0].astype(jnp.float32)            # (bs, st)
+    A = -jnp.exp(a_log_ref[...].astype(jnp.float32))   # (bd, st)
+
+    # (bs, bd, st) recurrence tensors — VMEM-resident only
+    a = jnp.exp(dt[:, :, None] * A[None])
+    b = (dt * xs)[:, :, None] * bm[:, None, :]
+    # fold the carried state into step 0
+    b = b.at[0].add(a[0] * h_ref[...])
+    _, hs = jax.lax.associative_scan(_combine, (a, b), axis=0)
+    h_ref[...] = hs[-1]
+    y = jnp.einsum("sdn,sn->sd", hs, cm)          # (bs, bd)
+    o_ref[0] = y.astype(o_ref.dtype)
+
+    @pl.when(si == ns - 1)
+    def _():
+        hout_ref[0] = h_ref[...]
+
+
+def selective_scan(dt: jax.Array, xs: jax.Array, bm: jax.Array,
+                   cm: jax.Array, a_log: jax.Array, h0: jax.Array, *,
+                   block_s: int = 64, block_d: int = 128,
+                   interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """y[b,s,d] = Σ_n h[b,s,d,n]·C[b,s,n] with
+    h_t = exp(dt_t·A)⊙h_{t-1} + (dt_t·x_t)⊗B_t,  A = −exp(a_log).
+
+    dt, xs: (B, S, D); bm, cm: (B, S, N); a_log: (D, N); h0: (B, D, N).
+    Returns (y (B,S,D) f32, h_last (B,D,N) f32).
+    """
+    B, S, D = dt.shape
+    N = bm.shape[-1]
+    bs = min(block_s, S)
+    bd = min(block_d, D)
+    assert S % bs == 0 and D % bd == 0, (S, bs, D, bd)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=(B, D // bd, S // bs),
+        in_specs=[
+            pl.BlockSpec((1, bs, bd), lambda b, d, s: (b, s, d)),   # dt
+            pl.BlockSpec((1, bs, bd), lambda b, d, s: (b, s, d)),   # xs
+            pl.BlockSpec((1, bs, N), lambda b, d, s: (b, s, 0)),    # B
+            pl.BlockSpec((1, bs, N), lambda b, d, s: (b, s, 0)),    # C
+            pl.BlockSpec((bd, N), lambda b, d, s: (d, 0)),          # A_log
+            pl.BlockSpec((1, bd, N), lambda b, d, s: (b, d, 0)),    # h0
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bs, bd), lambda b, d, s: (b, s, d)),   # y
+            pl.BlockSpec((1, bd, N), lambda b, d, s: (b, d, 0)),    # h_last
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, D, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bd, N), jnp.float32)],          # running h
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(dt, xs, bm, cm, a_log, h0)
+
+
+def selective_scan_ref(dt, xs, bm, cm, a_log, h0) -> Tuple[jax.Array, jax.Array]:
+    """Pure-jnp oracle (same algebra, HBM-materialized)."""
+    dtf = dt.astype(jnp.float32)
+    xsf = xs.astype(jnp.float32)
+    A = -jnp.exp(a_log.astype(jnp.float32))
+    a = jnp.exp(dtf[..., None] * A)                       # (B,S,D,N)
+    b = (dtf * xsf)[..., None] * bm.astype(jnp.float32)[:, :, None, :]
+    b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+    _, hs = jax.lax.associative_scan(_combine, (a, b), axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", hs, cm.astype(jnp.float32))
+    return y, hs[:, -1]

@@ -1,0 +1,188 @@
+"""WS-OCS quantized matmul Pallas kernel (paper §II-B + §II-C on TPU).
+
+out[M, K] = x[M, N] @ dequant(w[N, K]) with INT4/INT8 nibble-packed
+weights and per-group scales.
+
+TPU mapping of the paper's mechanisms (DESIGN.md §2):
+
+* **WS-OCS loop order** — grid = (K/bk, M/bm) with the weight *column
+  panel* index outermost. The weight BlockSpec index map ignores the inner
+  ``m`` index, so the Pallas pipeline fetches each (N × bk) panel from HBM
+  exactly once (NK total weight traffic — Table I's WS-OCS row), keeps it
+  VMEM-resident while *all* input row-tiles stream past (the input-reuse
+  buffer), and the (bm × bk) fp32 accumulation happens in registers/VMEM
+  (the partial-sum buffer). Weights are replaced only after every input
+  has been processed — the paper's stated replacement policy.
+
+* **RCW** — ``rcw_matmul`` keeps weights in HBM (``MemorySpace.ANY``) and
+  manually double-buffers the panel with ``make_async_copy``: the DMA for
+  panel k+1 is issued at the *first* inner step of panel k and waited on
+  only when panel k+1 begins — fill hides behind the M/bm compute steps,
+  exactly the paper's Phase-1/Phase-2 overlap. ``rcw=False`` issues a
+  blocking copy per panel (the paper's serial baseline).
+
+* **Dual INT4/INT8** — int4 weights travel nibble-packed (two per byte)
+  through HBM and VMEM, preserving INT4 traffic economics; dequant happens
+  at the MXU boundary (no native INT4 MACs on TPU).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _dequant_block(w_blk: jax.Array, scale_blk: jax.Array, bits: int,
+                   n: int) -> jax.Array:
+    """(Np, bk) packed/int8 block + (G, bk) scales → (N, bk) f32."""
+    if bits == 4:
+        lo = (w_blk & 0xF).astype(jnp.int8)
+        hi = ((w_blk >> 4) & 0xF).astype(jnp.int8)
+        lo = jnp.where(lo >= 8, lo - 16, lo)
+        hi = jnp.where(hi >= 8, hi - 16, hi)
+        q = jnp.stack([lo, hi], axis=1).reshape(n, w_blk.shape[-1])
+    else:
+        q = w_blk
+    g = scale_blk.shape[0]
+    sf = jnp.repeat(scale_blk, n // g, axis=0)
+    return q.astype(jnp.float32) * sf
+
+
+# ---------------------------------------------------------------------------
+# Variant A: pipelined BlockSpec kernel (production path; RCW overlap is
+# provided by the Pallas pipeline's implicit double-buffering)
+# ---------------------------------------------------------------------------
+
+def _panel_kernel(x_ref, w_ref, s_ref, xs_ref, o_ref, *, bits, n):
+    w = _dequant_block(w_ref[...], s_ref[...], bits, n)
+    x = x_ref[...].astype(jnp.float32)
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    if xs_ref is not None:
+        acc = acc * xs_ref[...].astype(jnp.float32)
+    o_ref[...] = acc
+
+
+def ws_ocs_matmul(x: jax.Array, w_data: jax.Array, w_scale: jax.Array, *,
+                  bits: int = 4, x_scale: Optional[jax.Array] = None,
+                  bm: int = 128, bk: int = 128,
+                  interpret: bool = False) -> jax.Array:
+    """Panel-stationary quantized matmul. x (M,N) int8/float; w_data
+    (N//2,K) uint8 or (N,K) int8; w_scale (G,K) f32; out (M,K) f32."""
+    M, N = x.shape
+    K = w_data.shape[1]
+    Np = w_data.shape[0]            # N//2 when packed
+    G = w_scale.shape[0]
+    bm = min(bm, M)
+    bk = min(bk, K)
+    assert M % bm == 0 and K % bk == 0, (M, bm, K, bk)
+
+    grid = (K // bk, M // bm)       # weight-panel index OUTERMOST (WS-OCS)
+    kernel = functools.partial(_panel_kernel, bits=bits, n=N)
+    in_specs = [
+        pl.BlockSpec((bm, N), lambda k, m: (m, 0)),       # input-reuse buf
+        pl.BlockSpec((Np, bk), lambda k, m: (0, k)),      # stationary panel
+        pl.BlockSpec((G, bk), lambda k, m: (0, k)),
+    ]
+    args = [x, w_data, w_scale]
+    if x_scale is not None:
+        in_specs.append(pl.BlockSpec((bm, 1), lambda k, m: (m, 0)))
+        args.append(x_scale)
+        wrapped = kernel
+    else:
+        wrapped = lambda xr, wr, sr, orf: kernel(xr, wr, sr, None, orf)
+
+    return pl.pallas_call(
+        wrapped,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bk), lambda k, m: (m, k)),
+        out_shape=jax.ShapeDtypeStruct((M, K), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(*args)
+
+
+# ---------------------------------------------------------------------------
+# Variant B: manual double-buffered RCW kernel (explicit Phase-1/Phase-2)
+# ---------------------------------------------------------------------------
+
+def _rcw_kernel(w_hbm, x_ref, s_ref, o_ref, wbuf, sems, *, bits, n, bk,
+                rcw: bool):
+    k, m = pl.program_id(0), pl.program_id(1)
+    nk = pl.num_programs(0)
+
+    def panel_copy(ki, slot):
+        return pltpu.make_async_copy(
+            w_hbm.at[:, pl.ds(ki * bk, bk)], wbuf.at[slot], sems.at[slot])
+
+    if rcw:
+        # Phase 1 (k==0, first panel): blocking fill of slot 0.
+        @pl.when((k == 0) & (m == 0))
+        def _():
+            cp = panel_copy(0, 0)
+            cp.start()
+            cp.wait()
+
+        # Phase 2: at the first compute step of panel k, issue the DMA for
+        # panel k+1 into the other slot — it completes while the MXU works
+        # through all M/bm input tiles of panel k (weight update hidden).
+        @pl.when((m == 0) & (k + 1 < nk))
+        def _():
+            panel_copy(k + 1, (k + 1) % 2).start()
+
+        # Wait for this panel's fill (issued during panel k-1's compute).
+        @pl.when((m == 0) & (k > 0))
+        def _():
+            panel_copy(k, k % 2).wait()
+    else:
+        # Serial baseline: blocking fill before each panel's compute.
+        @pl.when(m == 0)
+        def _():
+            cp = panel_copy(k, k % 2)
+            cp.start()
+            cp.wait()
+
+    w = _dequant_block(wbuf[k % 2], s_ref[...], bits, n)
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def rcw_matmul(x: jax.Array, w_data: jax.Array, w_scale: jax.Array, *,
+               bits: int = 4, bm: int = 128, bk: int = 128, rcw: bool = True,
+               interpret: bool = False) -> jax.Array:
+    """Explicit-RCW variant: weights stay in HBM; the kernel double-buffers
+    (N × bk) panels in VMEM scratch with async DMA. ``rcw`` toggles the
+    overlap (paper ablation)."""
+    M, N = x.shape
+    K = w_data.shape[1]
+    Np = w_data.shape[0]
+    G = w_scale.shape[0]
+    bm = min(bm, M)
+    bk = min(bk, K)
+    assert M % bm == 0 and K % bk == 0, (M, bm, K, bk)
+
+    grid = (K // bk, M // bm)
+    kernel = functools.partial(_rcw_kernel, bits=bits, n=N, bk=bk, rcw=rcw)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),  # weights: HBM
+            pl.BlockSpec((bm, N), lambda k, m: (m, 0)),
+            pl.BlockSpec((G, bk), lambda k, m: (0, k)),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda k, m: (m, k)),
+        out_shape=jax.ShapeDtypeStruct((M, K), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((2, Np, bk), w_data.dtype),   # double buffer
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(w_data, x, w_scale)

@@ -1,0 +1,170 @@
+"""Roofline analysis over the dry-run records (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape), single-pod mesh, TPU v5e terms:
+    compute    = FLOPs_per_device  / 197 TFLOP/s
+    memory     = bytes_per_device  / 819 GB/s
+    collective = wire_bytes_per_device / 50 GB/s (ring-model per-device
+                 wire bytes; see dryrun.parse_collectives)
+
+plus MODEL_FLOPS = 6·N·D (train) or 2·N·D (inference), N_active for MoE,
+and the useful-compute ratio MODEL_FLOPS / HLO_FLOPS (catches remat and
+dispatch overhead). FLOPs/bytes come from the layer-extrapolated analysis
+(scan bodies are counted once by XLA cost analysis — see dryrun.py).
+
+    PYTHONPATH=src python -m repro.launch.analysis [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs import SHAPES, get_config
+from repro.models import api
+from repro.models.layers import is_axes_leaf
+from repro.sim.chip import TPU_V5E
+
+PEAK = TPU_V5E.peak_bf16_flops
+HBM = TPU_V5E.hbm_bytes_per_s
+ICI = TPU_V5E.ici_bytes_per_s_per_link
+
+
+def model_params(cfg) -> Dict[str, float]:
+    """(total, active) parameter counts, embeddings excluded (standard
+    6ND convention). Active discounts expert params by topk/E."""
+    shapes = jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0), cfg))
+    axes = api.axes(cfg)
+    flat_s = jax.tree.leaves(shapes)
+    flat_a = jax.tree.leaves(axes, is_leaf=is_axes_leaf)
+    total = active = 0.0
+    for s, a in zip(flat_s, flat_a):
+        n = float(np.prod(s.shape))
+        if "vocab" in a:          # embedding / lm head
+            continue
+        total += n
+        if "experts" in a and cfg.num_experts:
+            active += n * cfg.num_experts_per_tok / cfg.num_experts
+        else:
+            active += n
+    return {"total": total, "active": active}
+
+
+def model_flops(cfg, shape, n_dev: int) -> float:
+    """6·N_active·D (train) / 2·N_active·D (inference), global."""
+    p = model_params(cfg)["active"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * p * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * p * tokens
+    return 2.0 * p * shape.global_batch  # decode: one token per sequence
+
+
+def roofline_terms(rec: dict) -> Optional[dict]:
+    if rec.get("status") != "ok" or "analysis" not in rec:
+        return None
+    a = rec["analysis"]
+    compute = a["flops_per_device"] / PEAK
+    memory = a["bytes_per_device"] / HBM
+    coll = a["wire_bytes_per_device"] / ICI
+    terms = {"compute_s": compute, "memory_s": memory, "collective_s": coll}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    cfg = get_config(rec["arch"])
+    mf = model_flops(cfg, SHAPES[rec["shape"]], rec["n_devices"])
+    hlo_global = a["flops_per_device"] * rec["n_devices"]
+    useful = mf / hlo_global if hlo_global else 0.0
+    # roofline fraction: useful model FLOPs per second at the bound, vs peak
+    step_time = bound
+    mfu = mf / (step_time * rec["n_devices"] * PEAK) if step_time else 0.0
+    return {**terms, "dominant": dom.replace("_s", ""),
+            "step_time_s": step_time, "model_flops": mf,
+            "useful_ratio": useful, "roofline_fraction": mfu}
+
+
+def load_records(dirpath: str, mesh: str = "single"):
+    recs = {}
+    for p in sorted(Path(dirpath).glob(f"*_{mesh}.json")):
+        rec = json.loads(p.read_text())
+        recs[(rec["arch"], rec["shape"])] = rec
+    return recs
+
+
+def table(dirpath: str = "experiments/dryrun") -> str:
+    recs = load_records(dirpath)
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant "
+        "| MFU | useful | temp GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape), rec in sorted(recs.items()):
+        if rec.get("status") == "skipped":
+            lines.append(f"| {arch} | {shape} | — | — | — | skipped "
+                         f"(quadratic @500k) | — | — | — |")
+            continue
+        t = roofline_terms(rec)
+        if t is None:
+            lines.append(f"| {arch} | {shape} | FAILED | | | | | | |")
+            continue
+        temp = rec["memory_analysis"].get("temp_bytes") or 0
+        lines.append(
+            f"| {arch} | {shape} | {t['compute_s']:.3f} | {t['memory_s']:.3f}"
+            f" | {t['collective_s']:.3f} | **{t['dominant']}** |"
+            f" {t['roofline_fraction']*100:.1f}% | {t['useful_ratio']:.2f} |"
+            f" {temp/1e9:.1f} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--compare", default=None,
+                    help="second records dir: print before/after table")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+    if args.compare:
+        print(compare(args.dir, args.compare))
+        return
+    if args.json:
+        recs = load_records(args.dir)
+        out = {f"{a}/{s}": roofline_terms(r) for (a, s), r in recs.items()
+               if r.get("status") == "ok"}
+        print(json.dumps(out, indent=1))
+    else:
+        print(table(args.dir))
+
+
+
+def compare(dir_base: str, dir_opt: str) -> str:
+    """Before/after table (baseline vs optimized sweeps) — §Perf."""
+    base = load_records(dir_base)
+    opt = load_records(dir_opt)
+    lines = [
+        "| arch | shape | base dominant | base step s | opt dominant "
+        "| opt step s | speedup | base MFU | opt MFU |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for key in sorted(base):
+        rb, ro = base.get(key), opt.get(key)
+        if not rb or rb.get("status") != "ok" or not ro \
+                or ro.get("status") != "ok":
+            continue
+        tb, to = roofline_terms(rb), roofline_terms(ro)
+        if not tb or not to:
+            continue
+        arch, shape = key
+        lines.append(
+            f"| {arch} | {shape} | {tb['dominant']} | {tb['step_time_s']:.3f}"
+            f" | {to['dominant']} | {to['step_time_s']:.3f}"
+            f" | **{tb['step_time_s']/to['step_time_s']:.2f}×**"
+            f" | {tb['roofline_fraction']*100:.1f}%"
+            f" | {to['roofline_fraction']*100:.1f}% |")
+    return "\n".join(lines)
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,310 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) on the
+production mesh with 512 placeholder host devices, and extract the
+roofline inputs (FLOPs, bytes, per-device memory, collective traffic)
+from the compiled artifact.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        --arch qwen2-72b --shape train_4k --mesh single \
+        [--out experiments/dryrun]
+
+The XLA_FLAGS line above MUST run before any other import (jax locks the
+device count at first init) — which is why this module sets it at line 1
+and why nothing else in the package sets it globally.
+"""
+import argparse
+import json
+import re
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config, long_500k_supported
+from repro.configs.specs import input_specs
+from repro.launch import steps as st
+from repro.launch.mesh import make_production_mesh
+from repro.parallel import sharding as sh
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+_SHAPE_RE = re.compile(r"(pred|[suf]\d+|bf16|f16)\[([\d,]*)\]")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_LIST_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _LIST_GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def parse_collectives(hlo: str, n_devices: int):
+    """Per-device wire-byte estimate per collective op (ring model):
+    all-reduce 2B(G−1)/G; all-gather/all-to-all B(G−1)/G (B = result
+    bytes); reduce-scatter B(G−1) (operand = B·G); permute B."""
+    per_op = {k: {"count": 0, "result_bytes": 0, "wire_bytes": 0.0}
+              for k in _COLL_OPS}
+    for line in hlo.splitlines():
+        s = line.strip()
+        m = re.search(r"= .*? (all-gather|all-reduce|reduce-scatter|"
+                      r"all-to-all|collective-permute)(?:-start|-done)?\(", s)
+        if not m:
+            continue
+        op = m.group(1)
+        if "-done(" in s:
+            continue  # count the -start, not the -done
+        result = s.split("=", 1)[1].split(m.group(1))[0]
+        B = _shape_bytes(result)
+        G = _group_size(s, n_devices)
+        if op == "all-reduce":
+            wire = 2 * B * (G - 1) / max(G, 1)
+        elif op in ("all-gather", "all-to-all"):
+            wire = B * (G - 1) / max(G, 1)
+        elif op == "reduce-scatter":
+            wire = B * (G - 1)
+        else:
+            wire = float(B)
+        d = per_op[op]
+        d["count"] += 1
+        d["result_bytes"] += B
+        d["wire_bytes"] += wire
+    return per_op
+
+
+# ---------------------------------------------------------------------------
+# Dry-run of one cell
+# ---------------------------------------------------------------------------
+
+def _reduced_depth_cfg(cfg, n: int):
+    """Full-width config with n (unrolled) layers — the extrapolation
+    probe for per-layer costs. XLA cost_analysis counts a scan body ONCE
+    (trip count ignored), so per-layer FLOPs/bytes/collectives are
+    derived from two unrolled reduced-depth compiles:
+        per_layer = (cost(k2) − cost(k1)) / (k2 − k1)
+        total     = cost(k1) + per_layer × (L − k1)
+    — still entirely HLO-derived (see EXPERIMENTS.md §Dry-run notes)."""
+    kw = dict(num_layers=n, scan_layers=False)
+    if cfg.family == "audio":
+        kw["encoder_layers"] = n
+    return cfg.replace(**kw)
+
+
+def _probe_depths(cfg):
+    if cfg.family == "hybrid":
+        p = len(cfg.block_pattern or ("R", "R", "A"))
+        return p, 2 * p
+    return 2, 4
+
+
+def _lower_compile(cfg, shape, mesh, donate=True):
+    kind, kwargs = input_specs(cfg, shape)
+    if kind == "train":
+        rules = sh.train_rules()
+    elif kind == "decode":
+        rules = sh.decode_rules()
+    else:
+        rules = sh.SERVE_RULES
+    with jax.set_mesh(mesh):
+        p_sh = st.param_shardings(cfg, mesh, rules)
+        if kind == "train":
+            from repro.parallel.flags import opt as _opt
+            fn = st.make_train_step(
+                cfg, grad_shardings=p_sh if _opt("GRADRS", default=False) else None)
+            o_sh = st.opt_shardings(cfg, mesh, rules)
+            b_sh = sh.batch_specs(kwargs["batch"], mesh, rules)
+            jf = jax.jit(fn, in_shardings=(p_sh, o_sh, b_sh),
+                         donate_argnums=(0, 1) if donate else ())
+            lowered = jf.lower(st.abstract_params(cfg),
+                               st.abstract_opt_state(cfg), kwargs["batch"])
+        elif kind == "prefill":
+            fn = st.make_prefill_step(cfg)
+            b_sh = sh.batch_specs(kwargs["batch"], mesh, rules)
+            c_sh = st.cache_sharding(cfg, mesh, rules, kwargs["cache"])
+            jf = jax.jit(fn, in_shardings=(p_sh, b_sh, c_sh),
+                         donate_argnums=(2,) if donate else ())
+            lowered = jf.lower(st.abstract_params(cfg), kwargs["batch"],
+                               kwargs["cache"])
+        else:
+            fn = st.make_decode_step(cfg)
+            t_sh = sh.batch_specs(kwargs["token"], mesh, rules)
+            c_sh = st.cache_sharding(cfg, mesh, rules, kwargs["cache"])
+            jf = jax.jit(fn, in_shardings=(p_sh, t_sh, c_sh,
+                                           sh.replicated(mesh)),
+                         donate_argnums=(2,) if donate else ())
+            lowered = jf.lower(st.abstract_params(cfg), kwargs["token"],
+                               kwargs["cache"],
+                               jax.ShapeDtypeStruct((), jnp.int32))
+        compiled = lowered.compile()
+    return kind, lowered, compiled
+
+
+def _cell_costs(cfg, shape, mesh, n_dev):
+    """flops/bytes/wire + collectives for one compile."""
+    _, lowered, compiled = _lower_compile(cfg, shape, mesh)
+    cost = compiled.cost_analysis() or {}
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = lowered.as_text()
+    coll = parse_collectives(hlo, n_dev)
+    return {
+        "flops": cost.get("flops", 0.0) or 0.0,
+        "bytes": cost.get("bytes accessed", 0.0) or 0.0,
+        "wire": sum(d["wire_bytes"] for d in coll.values()),
+        "collectives": coll,
+    }
+
+
+def layer_extrapolated_costs(cfg, shape, mesh, n_dev):
+    """Per-layer extrapolation from two reduced-depth unrolled compiles.
+    Chunked sequence scans (SSM / RG-LRU) are forced to single-chunk so
+    their full per-layer work is visible to cost analysis."""
+    from repro.models import scan_utils
+    k1, k2 = _probe_depths(cfg)
+    scan_utils.FULL_CHUNK_ANALYSIS = True
+    try:
+        c1 = _cell_costs(_reduced_depth_cfg(cfg, k1), shape, mesh, n_dev)
+        c2 = _cell_costs(_reduced_depth_cfg(cfg, k2), shape, mesh, n_dev)
+    finally:
+        scan_utils.FULL_CHUNK_ANALYSIS = False
+    L = cfg.num_layers
+
+    def extrap(a, b):
+        per = (b - a) / (k2 - k1)
+        return a + per * (L - k1), per
+
+    flops, flops_l = extrap(c1["flops"], c2["flops"])
+    byts, bytes_l = extrap(c1["bytes"], c2["bytes"])
+    wire, wire_l = extrap(c1["wire"], c2["wire"])
+    coll = {}
+    for op in _COLL_OPS:
+        a, b = c1["collectives"][op], c2["collectives"][op]
+        coll[op] = {k: extrap(a[k], b[k])[0] for k in
+                    ("count", "result_bytes", "wire_bytes")}
+    return {
+        "probe_depths": [k1, k2],
+        "flops_per_device": flops,
+        "bytes_per_device": byts,
+        "wire_bytes_per_device": wire,
+        "per_layer": {"flops": flops_l, "bytes": bytes_l, "wire": wire_l},
+        "collectives": coll,
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             smoke: bool = False, donate: bool = True,
+             analysis: bool = True) -> dict:
+    cfg = get_config(arch, smoke=smoke)
+    shape = SHAPES[shape_name]
+    if shape.name == "long_500k" and not long_500k_supported(cfg):
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped",
+                "reason": "full-attention arch: 500k dense decode is "
+                          "architecturally quadratic (DESIGN.md §4)"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+
+    t0 = time.time()
+    kind, lowered, compiled = _lower_compile(cfg, shape, mesh, donate=donate)
+    t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:  # CPU backend may not implement it
+        mem_d = {"error": str(e)}
+
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = lowered.as_text()
+    coll = parse_collectives(hlo, n_dev)
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "step_kind": kind,
+        "status": "ok",
+        "n_devices": n_dev,
+        "scan_flops_per_device": cost.get("flops"),
+        "scan_bytes_per_device": cost.get("bytes accessed"),
+        "memory_analysis": mem_d,
+        "scan_collectives": coll,
+        "compile_s": round(t_compile, 2),
+        "hlo_bytes": len(hlo),
+    }
+    del lowered, compiled, hlo
+
+    if analysis and rec["status"] == "ok":
+        t0 = time.time()
+        rec["analysis"] = layer_extrapolated_costs(cfg, shape, mesh, n_dev)
+        rec["analysis_s"] = round(time.time() - t0, 2)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=sorted(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--no-analysis", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    rec = run_cell(args.arch, args.shape, args.mesh == "multi",
+                   smoke=args.smoke, analysis=not args.no_analysis)
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    name = f"{args.arch}_{args.shape}_{args.mesh}.json"
+    (out / name).write_text(json.dumps(rec, indent=1))
+    summary = {k: rec.get(k) for k in
+               ("arch", "shape", "mesh", "status", "compile_s",
+                "analysis_s")}
+    if "analysis" in rec:
+        summary.update({k: rec["analysis"][k] for k in
+                        ("flops_per_device", "bytes_per_device",
+                         "wire_bytes_per_device")})
+    print(json.dumps(summary, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state. The single-pod mesh
+is a v5e-256 pod as 16×16 ("data", "model"); the multi-pod mesh stacks 2
+pods on a leading "pod" axis (DCN data-parallel domain).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model: int = 1, data: int = None):
+    """Small mesh over whatever devices exist (tests / CPU examples)."""
+    n = len(jax.devices())
+    data = data or (n // model)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,88 @@
+"""Resumable dry-run sweep over every (arch × shape × mesh) cell.
+
+Each cell runs in a fresh subprocess (its own XLA device-count env and
+memory lifetime); completed cells are skipped on re-run, so the sweep
+survives interruption — run it, kill it, run it again.
+
+    PYTHONPATH=src python -m repro.launch.sweep [--mesh single multi]
+        [--archs a b c] [--shapes s1 s2] [--out experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+from repro.configs import SHAPES, list_archs
+
+SHAPE_ORDER = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def run_sweep(archs, shapes, meshes, out: str, analysis: bool = True,
+              force: bool = False) -> dict:
+    outdir = Path(out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    results = {}
+    todo = [(a, s, m) for a in archs for s in shapes for m in meshes]
+    for i, (arch, shape, mesh) in enumerate(todo):
+        name = f"{arch}_{shape}_{mesh}.json"
+        path = outdir / name
+        if path.exists() and not force:
+            rec = json.loads(path.read_text())
+            if rec.get("status") in ("ok", "skipped"):
+                results[name] = rec["status"]
+                continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--mesh", mesh,
+               "--out", str(outdir)]
+        # the roofline table is single-pod only; multi-pod cells prove
+        # the pod-axis sharding compiles — skip the analysis probes there
+        if not analysis or mesh == "multi":
+            cmd.append("--no-analysis")
+        t0 = time.time()
+        print(f"[{i+1}/{len(todo)}] {arch} {shape} {mesh} ...",
+              flush=True)
+        proc = subprocess.run(cmd, capture_output=True, text=True,
+                              timeout=7200)
+        dt = time.time() - t0
+        if proc.returncode != 0:
+            results[name] = "FAILED"
+            (outdir / name).write_text(json.dumps({
+                "arch": arch, "shape": shape, "mesh": mesh,
+                "status": "failed",
+                "stderr": proc.stderr[-4000:],
+            }, indent=1))
+            print(f"    FAILED in {dt:.0f}s\n{proc.stderr[-2000:]}",
+                  flush=True)
+        else:
+            rec = json.loads(path.read_text())
+            results[name] = rec["status"]
+            print(f"    {rec['status']} in {dt:.0f}s", flush=True)
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", nargs="*", default=None)
+    ap.add_argument("--shapes", nargs="*", default=list(SHAPE_ORDER))
+    ap.add_argument("--mesh", nargs="*", default=["single", "multi"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--no-analysis", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    archs = args.archs or [a for a in list_archs() if a != "llama2-7b"]
+    res = run_sweep(archs, args.shapes, args.mesh, args.out,
+                    analysis=not args.no_analysis, force=args.force)
+    ok = sum(1 for v in res.values() if v in ("ok", "skipped"))
+    print(f"\n{ok}/{len(res)} cells green")
+    bad = {k: v for k, v in res.items() if v not in ("ok", "skipped")}
+    if bad:
+        print("failures:", json.dumps(bad, indent=1))
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Model zoo: one module per architecture family, unified by api.py."""
+from repro.models import api  # noqa: F401

@@ -1,0 +1,96 @@
+"""Uniform model API over the family modules.
+
+Every family exposes: ``init(rng, cfg)``, ``axes(cfg)``, ``forward``,
+``init_cache``, ``prefill``, ``decode_step``. This module adds the
+batch-dict plumbing (family-specific extra inputs), the LM loss, and the
+three canonical step functions the launcher/trainer/server jit:
+``loss_fn``, ``prefill_step``, ``serve_step``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import mamba, moe, recurrent, transformer, vlm, whisper
+
+FAMILIES = {
+    "dense": transformer,
+    "moe": moe,
+    "ssm": mamba,
+    "hybrid": recurrent,
+    "vlm": vlm,
+    "audio": whisper,
+}
+
+IGNORE = -100
+
+
+def family(cfg: ModelConfig):
+    return FAMILIES[cfg.family]
+
+
+def init(rng: jax.Array, cfg: ModelConfig) -> Dict:
+    return family(cfg).init(rng, cfg)
+
+
+def axes(cfg: ModelConfig) -> Dict:
+    return family(cfg).axes(cfg)
+
+
+def forward(params: Dict, cfg: ModelConfig, batch: Dict) -> jax.Array:
+    m = family(cfg)
+    if cfg.family == "audio":
+        return m.forward(params, cfg, batch["tokens"], batch["frames"])
+    if cfg.family == "vlm":
+        return m.forward(params, cfg, batch["tokens"],
+                         batch.get("vision_embeds"),
+                         batch.get("positions"))
+    return m.forward(params, cfg, batch["tokens"])
+
+
+def loss_fn(params: Dict, cfg: ModelConfig, batch: Dict) -> jax.Array:
+    """Next-token cross entropy; labels == IGNORE are masked out."""
+    logits = forward(params, cfg, batch)          # (B, S', V) f32
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:        # vlm: vision prefix
+        pad = logits.shape[1] - labels.shape[1]
+        labels = jnp.pad(labels, ((0, 0), (pad, 0)), constant_values=IGNORE)
+    # shift: logits at t predict token t+1
+    logits = logits[:, :-1]
+    targets = labels[:, 1:]
+    mask = (targets != IGNORE).astype(jnp.float32)
+    tgt = jnp.clip(targets, 0, cfg.vocab_size - 1)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return family(cfg).init_cache(cfg, batch, max_len)
+
+
+def prefill_step(params: Dict, cfg: ModelConfig, batch: Dict,
+                 cache) -> Tuple[jax.Array, object]:
+    m = family(cfg)
+    if cfg.family == "audio":
+        return m.prefill(params, cfg, batch["tokens"], cache,
+                         batch["frames"])
+    if cfg.family == "vlm":
+        return m.prefill(params, cfg, batch["tokens"], cache,
+                         batch.get("vision_embeds"), batch.get("positions"))
+    return m.prefill(params, cfg, batch["tokens"], cache)
+
+
+def serve_step(params: Dict, cfg: ModelConfig, token: jax.Array, cache,
+               pos_idx: jax.Array) -> Tuple[jax.Array, object]:
+    """One-token decode — the shape cells' ``decode_*`` / ``long_*`` step."""
+    return family(cfg).decode_step(params, cfg, token, cache, pos_idx)
+
+
+def cache_axes(cfg: ModelConfig):
+    """Logical axes tree mirroring init_cache's structure."""
+    return family(cfg).cache_axes(cfg)

@@ -1,0 +1,376 @@
+"""Shared model-building blocks.
+
+Parameters are plain pytrees (nested dicts of jnp arrays). Construction
+goes through a ``Maker`` so the same builder code yields either real
+initialized arrays (``InitMaker``) or logical sharding axes
+(``AxesMaker``) — the two trees are structurally identical by
+construction, which the sharding layer and tests rely on.
+
+All normalization / softmax / quantized-matmul calls route through
+``repro.kernels.ops`` so the paper's fused operators are first-class here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+
+
+# ---------------------------------------------------------------------------
+# Maker: one builder, two products (params | logical axes)
+# ---------------------------------------------------------------------------
+
+def is_axes_leaf(x) -> bool:
+    """A logical-axes leaf is a tuple of axis names (str or None) — as
+    opposed to structural tuples (e.g. heterogeneous layer stacks)."""
+    return isinstance(x, tuple) and all(
+        e is None or isinstance(e, str) for e in x)
+
+
+class Maker:
+    def param(self, name, shape, axes, scale=None, dtype=None):
+        raise NotImplementedError
+
+    def stack(self, n: int, build: Callable[["Maker"], Dict]) -> Dict:
+        raise NotImplementedError
+
+
+class InitMaker(Maker):
+    """Materializes initialized parameters."""
+
+    def __init__(self, rng: jax.Array, dtype):
+        self._rng = rng
+        self.dtype = dtype
+
+    def _next(self):
+        self._rng, sub = jax.random.split(self._rng)
+        return sub
+
+    def param(self, name, shape, axes, scale=None, dtype=None):
+        dtype = dtype or self.dtype
+        if scale == 0.0:
+            return jnp.zeros(shape, dtype)
+        if scale == 1.0 and len(shape) == 1:
+            return jnp.ones(shape, dtype)
+        fan_in = shape[0] if len(shape) > 1 else shape[0]
+        std = scale if scale is not None else fan_in ** -0.5
+        return (jax.random.normal(self._next(), shape, jnp.float32)
+                * std).astype(dtype)
+
+    def stack(self, n, build):
+        def one(rng):
+            return build(InitMaker(rng, self.dtype))
+        rngs = jax.random.split(self._next(), n)
+        return jax.vmap(one)(rngs)
+
+
+class AxesMaker(Maker):
+    """Produces the logical-axes tree (tuples of axis names, None = any)."""
+
+    def __init__(self):
+        self.dtype = None
+
+    def param(self, name, shape, axes, scale=None, dtype=None):
+        assert len(axes) == len(shape), (name, shape, axes)
+        return tuple(axes)
+
+    def stack(self, n, build):
+        inner = build(AxesMaker())
+        return jax.tree.map(lambda a: ("layers",) + a, inner,
+                            is_leaf=is_axes_leaf)
+
+
+# ---------------------------------------------------------------------------
+# Norms (routed through the paper's fused group ops)
+# ---------------------------------------------------------------------------
+
+def make_norm(mk: Maker, cfg: ModelConfig, d: Optional[int] = None) -> Dict:
+    d = d or cfg.d_model
+    p = {"gamma": mk.param("gamma", (d,), ("embed",), scale=1.0)}
+    if cfg.norm == "layernorm":
+        p["beta"] = mk.param("beta", (d,), ("embed",), scale=0.0)
+    return p
+
+
+def apply_norm(p: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    g = min(cfg.norm_group, x.shape[-1])
+    if x.shape[-1] % g != 0:
+        g = x.shape[-1]
+    if cfg.norm == "layernorm":
+        if cfg.use_fusion:
+            return ops.group_layernorm(x, p["gamma"], p["beta"], group_size=g)
+        mean = jnp.mean(x.astype(jnp.float32), -1, keepdims=True)
+        var = jnp.var(x.astype(jnp.float32), -1, keepdims=True)
+        return ((x - mean) * jax.lax.rsqrt(var + 1e-5) * p["gamma"]
+                + p["beta"]).astype(x.dtype)
+    if cfg.use_fusion:
+        return ops.group_rmsnorm(x, p["gamma"], group_size=g)
+    xf = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + 1e-6)
+    return (xf * inv * p["gamma"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE — full, half (chatglm 2d), M-RoPE (qwen2-vl)
+# ---------------------------------------------------------------------------
+
+def _rope_cos_sin(pos: jax.Array, dim: int, theta: float):
+    """pos (..., S) → cos/sin (..., S, dim//2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = pos.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _rotate(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Pairwise (interleaved-half) rotation on the last dim."""
+    d = x.shape[-1]
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """x (B, S, H, D); pos (B, S) or (3, B, S) for M-RoPE."""
+    d = x.shape[-1]
+    if cfg.rope_style == "none":
+        return x
+    if cfg.rope_style == "half":
+        # chatglm 2d-RoPE: rotate only the first half of head_dim
+        dh = d // 2
+        cos, sin = _rope_cos_sin(pos, dh, cfg.rope_theta)
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+        return jnp.concatenate(
+            [_rotate(x[..., :dh], cos, sin), x[..., dh:]], -1)
+    if cfg.rope_style == "mrope":
+        # qwen2-vl M-RoPE: frequency bands split into (t, h, w) sections,
+        # each section driven by its own position stream. pos (3, B, S).
+        sections = cfg.mrope_sections or (d // 2,)
+        assert sum(sections) == d // 2, (sections, d)
+        cos_parts, sin_parts = [], []
+        start = 0
+        full_inv = 1.0 / (cfg.rope_theta
+                          ** (jnp.arange(0, d, 2, jnp.float32) / d))
+        for i, sec in enumerate(sections):
+            inv = full_inv[start:start + sec]
+            ang = pos[i].astype(jnp.float32)[..., None] * inv
+            cos_parts.append(jnp.cos(ang))
+            sin_parts.append(jnp.sin(ang))
+            start += sec
+        cos = jnp.concatenate(cos_parts, -1)[:, :, None, :]
+        sin = jnp.concatenate(sin_parts, -1)[:, :, None, :]
+        return _rotate(x, cos, sin)
+    cos, sin = _rope_cos_sin(pos, d, cfg.rope_theta)
+    return _rotate(x, cos[:, :, None, :], sin[:, :, None, :])
+
+
+# ---------------------------------------------------------------------------
+# Linear (optionally quantized through the WS-OCS kernel)
+# ---------------------------------------------------------------------------
+
+def make_linear(mk: Maker, name: str, d_in: int, d_out: int,
+                axes: Tuple[str, str], bias: bool = False) -> Dict:
+    p = {"w": mk.param(f"{name}.w", (d_in, d_out), axes)}
+    if bias:
+        p["b"] = mk.param(f"{name}.b", (d_out,), (axes[1],), scale=0.0)
+    return p
+
+
+def apply_linear(p: Dict, x: jax.Array, cfg: Optional[ModelConfig] = None) -> jax.Array:
+    """x (..., d_in) @ w — through the quantized WS-OCS path when the
+    config requests it and the weight is a serving-time QuantizedWeight
+    (dict with 'q'/'scale'); plain dot otherwise (training)."""
+    w = p["w"]
+    if isinstance(w, dict):  # quantized serving weights (dtype carries bits)
+        bits = 4 if w["q"].dtype == jnp.uint8 else 8
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        out = ops.ws_ocs_matmul(x2, w["q"], w["scale"], bits=bits,
+                                rcw=bool(cfg.rcw) if cfg else True)
+        out = out.reshape(lead + (out.shape[-1],)).astype(x.dtype)
+    else:
+        out = jnp.dot(x, w.astype(x.dtype))
+    if "b" in p:
+        out = out + p["b"].astype(out.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (+ KV cache)
+# ---------------------------------------------------------------------------
+
+def make_attention(mk: Maker, cfg: ModelConfig, cross: bool = False) -> Dict:
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    p = {
+        "wq": make_linear(mk, "wq", d, qd, ("embed", "qkv"), cfg.qkv_bias),
+        "wk": make_linear(mk, "wk", d, kvd, ("embed", "kv"), cfg.qkv_bias),
+        "wv": make_linear(mk, "wv", d, kvd, ("embed", "kv"), cfg.qkv_bias),
+        "wo": make_linear(mk, "wo", qd, d, ("qkv", "embed"), False),
+    }
+    return p
+
+
+def _split_heads(x: jax.Array, n: int, d: int) -> jax.Array:
+    return x.reshape(x.shape[:-1] + (n, d))
+
+
+def apply_attention(p: Dict, cfg: ModelConfig, x: jax.Array,
+                    pos: jax.Array, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    kv_x: Optional[jax.Array] = None,
+                    cache: Optional[Dict] = None,
+                    cache_index: Optional[jax.Array] = None,
+                    use_rope: bool = True):
+    """Returns (out, new_cache). Modes:
+      * full forward (cache=None): self- or cross-attention over kv_x.
+      phase with a cache: writes K/V at ``cache_index`` then attends over
+      the cache prefix (decode: x is (B, 1, d)).
+    """
+    B, S, _ = x.shape
+    H, Hkv, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    q = _split_heads(apply_linear(p["wq"], x, cfg), H, D)
+    src = kv_x if kv_x is not None else x
+    k = _split_heads(apply_linear(p["wk"], src, cfg), Hkv, D)
+    v = _split_heads(apply_linear(p["wv"], src, cfg), Hkv, D)
+    if use_rope and cfg.rope_style != "none" and kv_x is None:
+        q = apply_rope(q, pos, cfg)
+        k = apply_rope(k, pos, cfg)
+
+    new_cache = cache
+    if cache is not None and kv_x is None:
+        # write this step's K/V into the cache at cache_index — a scalar
+        # () or a per-sequence (B,) vector (continuous batching: each
+        # slot decodes at its own position)
+        idx = cache_index
+        per_slot = hasattr(idx, "ndim") and idx.ndim == 1
+        ck, cv = cache["k"], cache["v"]
+        if per_slot:
+            upd = jax.vmap(
+                lambda c, u, i: jax.lax.dynamic_update_slice_in_dim(
+                    c, u.astype(c.dtype), i, 0))
+            ck = upd(ck, k, idx)
+            cv = upd(cv, v, idx)
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                ck, k.astype(ck.dtype), idx, 1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cv, v.astype(cv.dtype), idx, 1)
+        new_cache = {"k": ck, "v": cv}
+        k, v = ck, cv
+        # mask out cache positions beyond idx + S (per-slot when vector)
+        Sk = k.shape[1]
+        if per_slot:
+            valid = jnp.arange(Sk)[None, :] < (idx[:, None] + S)
+        else:
+            valid = jnp.arange(Sk) < (idx + S)
+        kq = jnp.swapaxes(q, 1, 2)
+        kk = jnp.swapaxes(k, 1, 2)
+        kv = jnp.swapaxes(v, 1, 2)
+        if S == 1:
+            # decode: single query over the cache. Grouped-GQA einsums —
+            # KV heads are NEVER repeated/transposed (a repeat forces
+            # GSPMD to rematerialize a seq-sharded cache), and the cache
+            # seq dim stays the last logits axis so a seq-over-"model"
+            # cache (flash-decoding layout, REPRO_OPT_SEQKV=1) keeps all
+            # score work shard-local with only tiny cross-shard reduces.
+            G = H // Hkv
+            qg = q[:, 0].reshape(B, Hkv, G, D)
+            # cache stays bf16 (no f32 copies of S-length tensors); the
+            # MXU-style f32 accumulation comes from preferred_element_type
+            logits = jnp.einsum("bhgd,bshd->bhgs", qg, k,
+                                preferred_element_type=jnp.float32) \
+                * (D ** -0.5)
+            if valid.ndim == 2:          # per-slot validity (B, Sk)
+                m = valid[:, None, None, :]
+            else:
+                m = valid[None, None, None, :]
+            if window is not None:
+                kpos = jnp.arange(Sk)[None, None, None, :]
+                last = (idx[:, None, None, None] if per_slot else idx) \
+                    + S - 1
+                m = m & (kpos > (last - window))
+            logits = jnp.where(m, logits, -1e30)
+            if cfg.use_fusion:
+                probs = ops.group_softmax(logits, cfg.softmax_group,
+                                          use_lut=cfg.use_lut_softmax)
+            else:
+                probs = jax.nn.softmax(logits, axis=-1)
+            out = jnp.einsum("bhgs,bshd->bhgd", probs.astype(v.dtype), v,
+                             preferred_element_type=jnp.float32)
+            out = out.reshape(B, H, 1, D)        # (B, H, q=1, D)
+        else:
+            # prefill into cache: attend causally over the written prefix
+            # (prefill always starts at a static cache_index of 0)
+            assert isinstance(idx, int) and idx == 0, "prefill needs idx=0"
+            out = ops.attention(kq, kk[:, :, :S], kv[:, :, :S],
+                                causal=causal, window=window,
+                                use_lut=cfg.use_lut_softmax)
+        out = jnp.swapaxes(out, 1, 2).astype(x.dtype)
+    else:
+        kq = jnp.swapaxes(q, 1, 2)
+        kk = jnp.swapaxes(k, 1, 2)
+        kv = jnp.swapaxes(v, 1, 2)
+        out = ops.attention(kq, kk, kv, causal=causal and kv_x is None,
+                            window=window, use_lut=cfg.use_lut_softmax)
+        out = jnp.swapaxes(out, 1, 2).astype(x.dtype)
+
+    out = out.reshape(B, S, H * D)
+    return apply_linear(p["wo"], out, cfg), new_cache
+
+
+def make_attn_cache(cfg: ModelConfig, batch: int, max_len: int,
+                    dtype=jnp.bfloat16) -> Dict:
+    shape = (batch, max_len, cfg.num_kv_heads, cfg.head_dim_)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def make_mlp(mk: Maker, cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.act == "swiglu":
+        return {
+            "wg": make_linear(mk, "wg", d, f, ("embed", "mlp")),
+            "wi": make_linear(mk, "wi", d, f, ("embed", "mlp")),
+            "wo": make_linear(mk, "wo", f, d, ("mlp", "embed")),
+        }
+    return {
+        "wi": make_linear(mk, "wi", d, f, ("embed", "mlp")),
+        "wo": make_linear(mk, "wo", f, d, ("mlp", "embed")),
+    }
+
+
+def apply_mlp(p: Dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if "wg" in p:
+        h = jax.nn.silu(apply_linear(p["wg"], x, cfg)) \
+            * apply_linear(p["wi"], x, cfg)
+    else:
+        h = jax.nn.gelu(apply_linear(p["wi"], x, cfg))
+    return apply_linear(p["wo"], h, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def make_embedding(mk: Maker, cfg: ModelConfig) -> Dict:
+    p = {"table": mk.param("embed", (cfg.vocab_size, cfg.d_model),
+                           ("vocab", "embed"), scale=1.0)}
+    if not cfg.tie_embeddings:
+        p["head"] = mk.param("head", (cfg.d_model, cfg.vocab_size),
+                             ("embed", "vocab"))
+    return p
+
+
+def embed_tokens(p: Dict, tokens: jax.Array, dtype) -> jax.Array:
+    return p["table"].astype(dtype)[tokens]
+
+
+def lm_logits(p: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    w = p["head"] if "head" in p else p["table"].T
+    return jnp.dot(x, w.astype(x.dtype)).astype(jnp.float32)

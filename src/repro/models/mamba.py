@@ -1,0 +1,183 @@
+"""Mamba-1 selective SSM (falcon-mamba-7b): 64 attention-free layers.
+
+The paper's group-softmax fusion is inapplicable here (no softmax
+attention — DESIGN.md §Arch-applicability); WS-OCS quantized GEMMs apply
+to the in/x/dt/out projections, and group-RMSNorm applies as usual. The
+selective scan runs as a chunked associative scan (scan_utils) — the
+TPU-idiomatic form of the recurrence.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.scan_utils import causal_conv1d
+
+
+def _build_layer(mk: L.Maker, cfg: ModelConfig) -> Dict:
+    d, di, st, dr = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank_
+    return {
+        "ln": L.make_norm(mk, cfg),
+        "in_proj": L.make_linear(mk, "in_proj", d, 2 * di, ("embed", "inner")),
+        "conv_w": mk.param("conv_w", (cfg.d_conv, di), (None, "inner"),
+                           scale=cfg.d_conv ** -0.5),
+        "conv_b": mk.param("conv_b", (di,), ("inner",), scale=0.0),
+        "x_proj": L.make_linear(mk, "x_proj", di, dr + 2 * st,
+                                ("inner", None)),
+        "dt_proj": L.make_linear(mk, "dt_proj", dr, di, (None, "inner"),
+                                 bias=True),
+        "A_log": mk.param("A_log", (di, st), ("inner", "state"), scale=1.0),
+        "D": mk.param("D", (di,), ("inner",), scale=1.0),
+        "out_proj": L.make_linear(mk, "out_proj", di, d, ("inner", "embed")),
+    }
+
+
+def build(mk: L.Maker, cfg: ModelConfig) -> Dict:
+    return {
+        "embed": L.make_embedding(mk, cfg),
+        "layers": mk.stack(cfg.num_layers,
+                           functools.partial(_build_layer, cfg=cfg)),
+        "ln_f": L.make_norm(mk, cfg),
+    }
+
+
+def init(rng, cfg):
+    return build(L.InitMaker(rng, cfg.dtype), cfg)
+
+
+def axes(cfg):
+    return build(L.AxesMaker(), cfg)
+
+
+_CHUNK = 256  # seq chunk: bounds the live (B, chunk, di, state) tensors
+
+
+def _mixer_chunk(lp: Dict, cfg: ModelConfig, xc: jax.Array,
+                 h0: jax.Array, conv_state: jax.Array):
+    """One sequence chunk through the full mixer. xc (B, ck, d)."""
+    B = xc.shape[0]
+    di, st, dr = cfg.d_inner, cfg.ssm_state, cfg.dt_rank_
+    xz = L.apply_linear(lp["in_proj"], xc, cfg)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs, new_conv = causal_conv1d(xs, lp["conv_w"].astype(xs.dtype), conv_state)
+    xs = jax.nn.silu(xs + lp["conv_b"].astype(xs.dtype))
+
+    proj = L.apply_linear(lp["x_proj"], xs, cfg)
+    dt, Bmat, Cmat = jnp.split(proj, [dr, dr + st], axis=-1)
+    dt = jax.nn.softplus(L.apply_linear(lp["dt_proj"], dt, cfg))
+
+    # fused VMEM-resident scan (Pallas on TPU; jnp oracle elsewhere) —
+    # the hardware-aware form: no (B,S,di,st) HBM tensors
+    from repro.kernels import ops
+    y, h_last = ops.selective_scan(
+        dt.astype(jnp.float32), xs.astype(jnp.float32),
+        Bmat.astype(jnp.float32), Cmat.astype(jnp.float32),
+        lp["A_log"], h0)
+    y = y + xs.astype(jnp.float32) * lp["D"].astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(xc.dtype)
+    return L.apply_linear(lp["out_proj"], y, cfg), h_last, new_conv
+
+
+def _mixer(lp: Dict, cfg: ModelConfig, x: jax.Array,
+           state: Optional[Dict]) -> Tuple[jax.Array, Optional[Dict]]:
+    """x (B, S, d) → (B, S, d); state {"h": (B,di,st) f32, "conv":
+    (B,K-1,di)} threads decode/prefill recurrent state. The sequence is
+    processed in _CHUNK-sized pieces so only chunk-sized (B,ck,di,st)
+    tensors are ever alive (DESIGN.md: the SSM memory discipline)."""
+    B, S, _ = x.shape
+    di, st, K = cfg.d_inner, cfg.ssm_state, cfg.d_conv
+    h0 = jnp.zeros((B, di, st), jnp.float32) if state is None else state["h"]
+    conv0 = jnp.zeros((B, K - 1, di), x.dtype) if state is None \
+        else state["conv"].astype(x.dtype)
+
+    from repro.models import scan_utils
+    ck = S if scan_utils.FULL_CHUNK_ANALYSIS else min(_CHUNK, S)
+    if S % ck != 0:
+        ck = S
+    n_chunks = S // ck
+    if n_chunks == 1:
+        out, h_last, new_conv = _mixer_chunk(lp, cfg, x, h0, conv0)
+    else:
+        xc = jnp.moveaxis(x.reshape(B, n_chunks, ck, -1), 1, 0)
+
+        def body(carry, xck):
+            h, conv = carry
+            out, h2, conv2 = _mixer_chunk(lp, cfg, xck, h, conv)
+            return (h2, conv2), out
+
+        (h_last, new_conv), outs = jax.lax.scan(body, (h0, conv0), xc)
+        out = jnp.moveaxis(outs, 0, 1).reshape(B, S, -1)
+    new_state = None if state is None else {"h": h_last, "conv": new_conv}
+    return out, new_state
+
+
+def _layer_fn(cfg, x, lp, state):
+    h = L.apply_norm(lp["ln"], x, cfg)
+    out, new_state = _mixer(lp, cfg, h, state)
+    return x + out, new_state
+
+
+def _run_layers(params, cfg, x, state):
+    from repro.parallel.act_sharding import constrain_residual
+
+    def body(carry, xs):
+        lp, lstate = xs
+        out, ns = _layer_fn(cfg, constrain_residual(carry), lp, lstate)
+        return constrain_residual(out), ns
+
+    f = body
+    if cfg.remat:
+        f = jax.checkpoint(body,
+                           policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.scan_layers:
+        return jax.lax.scan(f, x, (params["layers"], state))
+    new_states = []
+    for i in range(cfg.num_layers):
+        lp = jax.tree.map(lambda a: a[i], params["layers"])
+        ls = None if state is None else jax.tree.map(lambda a: a[i], state)
+        x, ns = f(x, (lp, ls))
+        new_states.append(ns)
+    ns = None if state is None else jax.tree.map(
+        lambda *xs: jnp.stack(xs), *new_states)
+    return x, ns
+
+
+def forward(params, cfg, tokens):
+    x = L.embed_tokens(params["embed"], tokens, cfg.dtype)
+    x, _ = _run_layers(params, cfg, x, None)
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    return L.lm_logits(params["embed"], x, cfg)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    del max_len  # O(1) state — the whole point of an SSM
+    L_, di, st, K = cfg.num_layers, cfg.d_inner, cfg.ssm_state, cfg.d_conv
+    return {
+        "h": jnp.zeros((L_, batch, di, st), jnp.float32),
+        "conv": jnp.zeros((L_, batch, K - 1, di), cfg.dtype),
+    }
+
+
+def prefill(params, cfg, tokens, cache):
+    x = L.embed_tokens(params["embed"], tokens, cfg.dtype)
+    x, cache = _run_layers(params, cfg, x, cache)
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    return L.lm_logits(params["embed"], x[:, -1], cfg), cache
+
+
+def decode_step(params, cfg, token, cache, pos_idx):
+    del pos_idx  # stateful — position is implicit in the carried state
+    x = L.embed_tokens(params["embed"], token, cfg.dtype)
+    x, cache = _run_layers(params, cfg, x, cache)
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    return L.lm_logits(params["embed"], x[:, -1], cfg), cache
+
+
+def cache_axes(cfg: ModelConfig):
+    return {"h": ("layers", "batch", "inner", "state"),
+            "conv": ("layers", "batch", None, "inner")}

@@ -1,0 +1,222 @@
+"""Mixture-of-Experts decoder (arctic-480b: 128e top-2 + dense residual;
+dbrx-132b: 16e top-4).
+
+Expert dispatch is GShard-style: tokens are split into groups, routed with
+top-k gating under a capacity factor, and moved with one-hot einsum
+dispatch/combine tensors. Under pjit the expert dimension is sharded over
+the "model" mesh axis (expert parallelism); GSPMD turns the dispatch
+einsums into the all-to-all pattern. The paper's WS-OCS applies to the
+expert GEMMs directly — each expert's (d × ff) panel is a weight column
+panel (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+def _build_moe_ffn(mk: L.Maker, cfg: ModelConfig) -> Dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    p = {
+        "gate": mk.param("gate", (d, e), ("embed", None)),
+        "wg": mk.param("wg", (e, d, f), ("experts", "embed", "mlp")),
+        "wi": mk.param("wi", (e, d, f), ("experts", "embed", "mlp")),
+        "wo": mk.param("wo", (e, f, d), ("experts", "mlp", "embed")),
+    }
+    if cfg.moe_dense_ff:
+        p["dense"] = L.make_mlp(mk, cfg, d_ff=cfg.moe_dense_ff)
+    return p
+
+
+def _build_layer(mk: L.Maker, cfg: ModelConfig) -> Dict:
+    return {
+        "ln1": L.make_norm(mk, cfg),
+        "attn": L.make_attention(mk, cfg),
+        "ln2": L.make_norm(mk, cfg),
+        "moe": _build_moe_ffn(mk, cfg),
+    }
+
+
+def build(mk: L.Maker, cfg: ModelConfig) -> Dict:
+    return {
+        "embed": L.make_embedding(mk, cfg),
+        "layers": mk.stack(cfg.num_layers,
+                           functools.partial(_build_layer, cfg=cfg)),
+        "ln_f": L.make_norm(mk, cfg),
+    }
+
+
+def init(rng, cfg):
+    return build(L.InitMaker(rng, cfg.dtype), cfg)
+
+
+def axes(cfg):
+    return build(L.AxesMaker(), cfg)
+
+
+def _route(probs: jax.Array, k: int, cap: int):
+    """GShard iterative top-k routing. probs (G, S, E) → dispatch
+    (G,S,E,C) one-hot and combine (G,S,E,C) gate-weighted. Only
+    (G,S,E[,C])-sized tensors are materialized (never a k×E×C blowup)."""
+    G, S, E = probs.shape
+    remaining = probs
+    counts = jnp.zeros((G, 1, E), jnp.float32)    # slots used per expert
+    dispatch = jnp.zeros((G, S, E, cap), jnp.float32)
+    combine = jnp.zeros((G, S, E, cap), jnp.float32)
+    gate_total = jnp.zeros((G, S), jnp.float32)
+    picks = []
+    for _ in range(k):                            # k is small & static
+        idx = jnp.argmax(remaining, axis=-1)      # (G, S)
+        mask = jax.nn.one_hot(idx, E, dtype=jnp.float32)
+        gate = jnp.sum(probs * mask, axis=-1)     # (G, S)
+        pos = jnp.cumsum(mask, axis=1) - mask + counts   # (G, S, E)
+        pos_tok = jnp.sum(pos * mask, axis=-1)    # (G, S)
+        keep = (pos_tok < cap).astype(jnp.float32)
+        cap_oh = jax.nn.one_hot(pos_tok.astype(jnp.int32), cap,
+                                dtype=jnp.float32)        # (G, S, C)
+        slot = mask[..., None] * cap_oh[:, :, None, :] \
+            * keep[..., None, None]               # (G, S, E, C)
+        dispatch = dispatch + slot
+        picks.append((gate, slot))
+        gate_total = gate_total + gate
+        counts = counts + jnp.sum(mask * keep[..., None], axis=1,
+                                  keepdims=True)
+        remaining = remaining * (1.0 - mask)
+    norm = jnp.maximum(gate_total, 1e-9)
+    for gate, slot in picks:
+        combine = combine + (gate / norm)[..., None, None] * slot
+    return dispatch, combine
+
+
+def _constrain_ep(xe: jax.Array) -> jax.Array:
+    """REPRO_OPT_EPMOE=1: pin the dispatched token buffer (G, E, C, d) to
+    expert-parallel layout — E over "data" (matching the expert weights'
+    sharding) so GSPMD moves TOKENS to experts (one all-to-all) instead of
+    all-gathering expert weight panels (EXPERIMENTS.md §Perf)."""
+    # NOTE (§Perf, refuted hypothesis): pinning E here ping-pongs
+    # reshardings against the data-sharded token groups (2.2x MORE wire);
+    # the winning form is the rules-only experts→"model" layout
+    # (REPRO_OPT_EPMODEL) with no activation constraint.
+    axis = "data" if os.environ.get("REPRO_OPT_EPMOE") == "1" else None
+    if axis is None or xe.ndim != 4:
+        return xe
+    from jax.sharding import PartitionSpec as P
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.shape or axis not in mesh.shape:
+        return xe
+    if xe.shape[1] % mesh.shape[axis] != 0:
+        return xe
+    return jax.lax.with_sharding_constraint(xe, P(None, axis, None, None))
+
+
+def apply_moe_ffn(p: Dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """x (B, S, d) → (B, S, d). GShard grouped top-k einsum dispatch;
+    groups of ~512 tokens keep the per-expert capacity (and the dispatch
+    tensors) small."""
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    T_tot = B * S
+    Sg = 512
+    while T_tot % Sg != 0:
+        Sg //= 2
+    G = T_tot // Sg
+    cap = max(k, int(Sg * k * cfg.capacity_factor / E) + 1)
+
+    xt = x.reshape(G, Sg, d)
+    logits = jnp.einsum("gsd,de->gse", xt.astype(jnp.float32),
+                        p["gate"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    dispatch, combine = _route(probs, k, cap)
+
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch.astype(cfg.dtype),
+                    xt.astype(cfg.dtype))                    # (G,E,cap,d)
+    xe = _constrain_ep(xe)       # expert-parallel all-to-all (§Perf opt)
+    hg = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["wg"].astype(cfg.dtype)))
+    hu = jnp.einsum("gecd,edf->gecf", xe, p["wi"].astype(cfg.dtype))
+    he = jnp.einsum("gecf,efd->gecd", hg * hu, p["wo"].astype(cfg.dtype))
+    he = _constrain_ep(he)
+    out = jnp.einsum("gsec,gecd->gsd", combine.astype(cfg.dtype), he)
+
+    out = out.reshape(B, S, d)
+    if "dense" in p:                                          # arctic residual
+        out = out + L.apply_mlp(p["dense"], cfg, x)
+    return out
+
+
+def _layer_fn(cfg, x, pos, lp, cache, cache_index):
+    h = L.apply_norm(lp["ln1"], x, cfg)
+    attn_out, new_cache = L.apply_attention(lp["attn"], cfg, h, pos,
+                                            causal=True, cache=cache,
+                                            cache_index=cache_index)
+    x = x + attn_out
+    x = x + apply_moe_ffn(lp["moe"], cfg,
+                          L.apply_norm(lp["ln2"], x, cfg))
+    return x, new_cache
+
+
+def _run_layers(params, cfg, x, pos, cache, cache_index):
+    from repro.parallel.act_sharding import constrain_residual
+
+    def body(carry, xs):
+        lp, lcache = xs
+        out, new_cache = _layer_fn(cfg, constrain_residual(carry), pos, lp,
+                                   lcache, cache_index)
+        return constrain_residual(out), new_cache
+
+    f = body
+    if cfg.remat:
+        f = jax.checkpoint(body,
+                           policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.scan_layers:
+        return jax.lax.scan(f, x, (params["layers"], cache))
+    new_caches = []
+    for i in range(cfg.num_layers):
+        lp = jax.tree.map(lambda a: a[i], params["layers"])
+        lc = None if cache is None else jax.tree.map(lambda a: a[i], cache)
+        x, nc = f(x, (lp, lc))
+        new_caches.append(nc)
+    nc = None if cache is None else jax.tree.map(
+        lambda *xs: jnp.stack(xs), *new_caches)
+    return x, nc
+
+
+def forward(params, cfg, tokens):
+    B, S = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, cfg.dtype)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x, _ = _run_layers(params, cfg, x, pos, None, None)
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    return L.lm_logits(params["embed"], x, cfg)
+
+
+init_cache = T.init_cache
+cache_axes = T.cache_axes
+
+
+def prefill(params, cfg, tokens, cache):
+    B, S = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, cfg.dtype)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x, cache = _run_layers(params, cfg, x, pos, cache, 0)
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    return L.lm_logits(params["embed"], x[:, -1], cfg), cache
+
+
+def decode_step(params, cfg, token, cache, pos_idx):
+    B = token.shape[0]
+    x = L.embed_tokens(params["embed"], token, cfg.dtype)
+    if hasattr(pos_idx, "ndim") and pos_idx.ndim == 1:   # per-slot (B,)
+        pos = pos_idx[:, None]
+    else:
+        pos = jnp.broadcast_to(pos_idx[None, None], (B, 1))
+    x, cache = _run_layers(params, cfg, x, pos, cache, pos_idx)
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    return L.lm_logits(params["embed"], x[:, -1], cfg), cache

@@ -1,0 +1,269 @@
+"""RecurrentGemma-style (Griffin) hybrid: RG-LRU recurrent blocks + local
+sliding-window attention in a repeating (R, R, A) pattern.
+
+Sub-quadratic by construction (bounded window + O(1) recurrent state), so
+this family runs the long_500k cell. The RG-LRU recurrence is elementwise
+(no softmax) — the paper's softmax fusion applies only to the local-
+attention layers (DESIGN.md §Arch-applicability); group-RMSNorm and
+WS-OCS GEMMs apply everywhere. Layers are heterogeneous, so the stack is
+an unrolled loop over per-layer param dicts (26 small layers — compile
+cost is acceptable; see DESIGN.md §9).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.scan_utils import causal_conv1d, linear_recurrence
+
+
+def layer_kinds(cfg: ModelConfig) -> List[str]:
+    pat = cfg.block_pattern or ("R", "R", "A")
+    return [pat[i % len(pat)] for i in range(cfg.num_layers)]
+
+
+def _build_rec_layer(mk: L.Maker, cfg: ModelConfig) -> Dict:
+    d, w = cfg.d_model, cfg.d_model  # lru_width = d_model
+    return {
+        "ln1": L.make_norm(mk, cfg),
+        "wy": L.make_linear(mk, "wy", d, w, ("embed", "inner")),
+        "wx": L.make_linear(mk, "wx", d, w, ("embed", "inner")),
+        "conv_w": mk.param("conv_w", (cfg.d_conv, w), (None, "inner"),
+                           scale=cfg.d_conv ** -0.5),
+        "wa": L.make_linear(mk, "wa", w, w, ("inner", "inner"), bias=True),
+        "wi": L.make_linear(mk, "wi", w, w, ("inner", "inner"), bias=True),
+        "lam": mk.param("lam", (w,), ("inner",), scale=1.0),
+        "wo": L.make_linear(mk, "wo", w, d, ("inner", "embed")),
+        "ln2": L.make_norm(mk, cfg),
+        "mlp": L.make_mlp(mk, cfg),
+    }
+
+
+def _build_attn_layer(mk: L.Maker, cfg: ModelConfig) -> Dict:
+    return {
+        "ln1": L.make_norm(mk, cfg),
+        "attn": L.make_attention(mk, cfg),
+        "ln2": L.make_norm(mk, cfg),
+        "mlp": L.make_mlp(mk, cfg),
+    }
+
+
+def build(mk: L.Maker, cfg: ModelConfig) -> Dict:
+    layers = []
+    for kind in layer_kinds(cfg):
+        builder = _build_rec_layer if kind == "R" else _build_attn_layer
+        layers.append(builder(mk, cfg))
+    return {
+        "embed": L.make_embedding(mk, cfg),
+        "layers": tuple(layers),
+        "ln_f": L.make_norm(mk, cfg),
+    }
+
+
+def init(rng, cfg):
+    return build(L.InitMaker(rng, cfg.dtype), cfg)
+
+
+def axes(cfg):
+    ax = build(L.AxesMaker(), cfg)
+    # "kind" markers are static strings, not params — strip from axes too
+    return ax
+
+
+def _rglru(lp: Dict, cfg: ModelConfig, x: jax.Array,
+           h0: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """RG-LRU: a_t = exp(−c·softplus(Λ)·r_t); h_t = a_t h_{t−1} +
+    √(1−a_t²)·(i_t ⊙ x_t). Elementwise — runs via the shared chunked
+    associative scan."""
+    r = jax.nn.sigmoid(L.apply_linear(lp["wa"], x, cfg).astype(jnp.float32))
+    i = jax.nn.sigmoid(L.apply_linear(lp["wi"], x, cfg).astype(jnp.float32))
+    log_a = -cfg.rglru_c * jax.nn.softplus(lp["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = i * x.astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * gated
+    hs, h_last = linear_recurrence(a, b, h0)
+    return hs.astype(x.dtype), h_last
+
+
+def _rec_block(lp, cfg, x, state):
+    """Temporal-mix for an R layer. state {"h": (B,w) f32, "conv": ...}."""
+    B = x.shape[0]
+    w = cfg.d_model
+    y = jax.nn.gelu(L.apply_linear(lp["wy"], x, cfg))
+    xb = L.apply_linear(lp["wx"], x, cfg)
+    conv0 = None if state is None else state["conv"].astype(xb.dtype)
+    xb, new_conv = causal_conv1d(xb, lp["conv_w"].astype(xb.dtype), conv0)
+    h0 = jnp.zeros((B, w), jnp.float32) if state is None else state["h"]
+    hs, h_last = _rglru(lp, cfg, xb, h0)
+    out = L.apply_linear(lp["wo"], hs * y, cfg)
+    new_state = None if state is None else {"h": h_last, "conv": new_conv}
+    return out, new_state
+
+
+def _ring_write(cache_kv: jax.Array, new: jax.Array, pos: jax.Array):
+    """Write a single-step K/V (B, 1, H, D) into the (B, W, H, D) ring
+    buffer at slot pos % W."""
+    W = cache_kv.shape[1]
+    return jax.lax.dynamic_update_slice_in_dim(
+        cache_kv, new.astype(cache_kv.dtype), pos % W, 1)
+
+
+def _attn_block(lp, cfg, x, pos, state, pos_idx):
+    """Temporal-mix for an A layer (local window attention).
+
+    Full-sequence mode (state None or prefill): windowed flash attention.
+    Decode mode (S==1): ring-buffer KV cache of size window — O(1) memory
+    for arbitrarily long sequences (the long_500k path)."""
+    B, S, _ = x.shape
+    H, Hkv, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    Wn = cfg.window
+    if state is None or S > 1:
+        h = x
+        q = L.apply_linear(lp["attn"]["wq"], h, cfg).reshape(B, S, H, D)
+        k = L.apply_linear(lp["attn"]["wk"], h, cfg).reshape(B, S, Hkv, D)
+        v = L.apply_linear(lp["attn"]["wv"], h, cfg).reshape(B, S, Hkv, D)
+        q = L.apply_rope(q, pos, cfg)
+        k = L.apply_rope(k, pos, cfg)
+        out = ops_attention(q, k, v, cfg, window=Wn)
+        out = L.apply_linear(lp["attn"]["wo"], out.reshape(B, S, H * D), cfg)
+        new_state = None
+        if state is not None:  # prefill: stash the last `window` keys
+            kc, vc = state["k"], state["v"]
+            Wc = kc.shape[1]
+            take = min(Wc, S)
+            # ring layout: token t lives at slot t % W
+            src_pos = jnp.arange(take) + (S - take)
+            slots = src_pos % Wc
+            kc = kc.at[:, slots].set(k[:, S - take:].astype(kc.dtype))
+            vc = vc.at[:, slots].set(v[:, S - take:].astype(vc.dtype))
+            new_state = {"k": kc, "v": vc}
+        return out, new_state
+    # ---- decode ----
+    h = x
+    q = L.apply_linear(lp["attn"]["wq"], h, cfg).reshape(B, 1, H, D)
+    k = L.apply_linear(lp["attn"]["wk"], h, cfg).reshape(B, 1, Hkv, D)
+    v = L.apply_linear(lp["attn"]["wv"], h, cfg).reshape(B, 1, Hkv, D)
+    q = L.apply_rope(q, pos, cfg)
+    k = L.apply_rope(k, pos, cfg)
+    kc = _ring_write(state["k"], k, pos_idx)
+    vc = _ring_write(state["v"], v, pos_idx)
+    Wc = kc.shape[1]
+    valid = jnp.arange(Wc)[None, None, None, :] <= pos_idx  # slots filled
+    qh = jnp.swapaxes(q, 1, 2)
+    kh = jnp.repeat(jnp.swapaxes(kc, 1, 2), H // Hkv, axis=1)
+    vh = jnp.repeat(jnp.swapaxes(vc, 1, 2), H // Hkv, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", qh.astype(jnp.float32),
+                        kh.astype(jnp.float32)) * (D ** -0.5)
+    logits = jnp.where(valid, logits, -1e30)
+    if cfg.use_fusion:
+        from repro.kernels import ops
+        probs = ops.group_softmax(logits, cfg.softmax_group,
+                                  use_lut=cfg.use_lut_softmax)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs.astype(jnp.float32),
+                     vh.astype(jnp.float32))
+    out = jnp.swapaxes(out, 1, 2).reshape(B, 1, H * D).astype(x.dtype)
+    out = L.apply_linear(lp["attn"]["wo"], out, cfg)
+    return out, {"k": kc, "v": vc}
+
+
+def ops_attention(q, k, v, cfg, window):
+    from repro.kernels import ops
+    qh = jnp.swapaxes(q, 1, 2)
+    kh = jnp.swapaxes(k, 1, 2)
+    vh = jnp.swapaxes(v, 1, 2)
+    out = ops.attention(qh, kh, vh, causal=True, window=window,
+                        use_lut=cfg.use_lut_softmax)
+    return jnp.swapaxes(out, 1, 2)
+
+
+def _layer(kind, cfg, lp, x, pos, state, pos_idx):
+    h = L.apply_norm(lp["ln1"], x, cfg)
+    if kind == "R":
+        mix, new_state = _rec_block(lp, cfg, h, state)
+    else:
+        mix, new_state = _attn_block(lp, cfg, h, pos, state, pos_idx)
+    x = x + mix
+    x = x + L.apply_mlp(lp["mlp"], cfg, L.apply_norm(lp["ln2"], x, cfg))
+    return x, new_state
+
+
+def _run(params, cfg, x, pos, states, pos_idx):
+    kinds = layer_kinds(cfg)
+    new_states = []
+    for i, kind in enumerate(kinds):
+        lp = params["layers"][i]
+        st = None if states is None else states[i]
+
+        def fn(lp_, x_, pos_, st_, pidx_, _kind=kind):
+            return _layer(_kind, cfg, lp_, x_, pos_, st_, pidx_)
+
+        if cfg.remat and states is None:
+            fn = jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.nothing_saveable)
+        from repro.parallel.act_sharding import constrain_residual
+        x = constrain_residual(x)
+        x, ns = fn(lp, x, pos, st, pos_idx)
+        new_states.append(ns)
+    return x, (None if states is None else tuple(new_states))
+
+
+def forward(params, cfg, tokens):
+    B, S = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, cfg.dtype)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x, _ = _run(params, cfg, x, pos, None, None)
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    return L.lm_logits(params["embed"], x, cfg)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    del max_len  # bounded: ring window for A layers, O(1) state for R
+    w = cfg.d_model
+    states = []
+    for kind in layer_kinds(cfg):
+        if kind == "R":
+            states.append({
+                "h": jnp.zeros((batch, w), jnp.float32),
+                "conv": jnp.zeros((batch, cfg.d_conv - 1, w), cfg.dtype),
+            })
+        else:
+            kv = (batch, cfg.window, cfg.num_kv_heads, cfg.head_dim_)
+            states.append({"k": jnp.zeros(kv, cfg.dtype),
+                           "v": jnp.zeros(kv, cfg.dtype)})
+    return tuple(states)
+
+
+def prefill(params, cfg, tokens, cache):
+    B, S = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, cfg.dtype)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x, cache = _run(params, cfg, x, pos, cache, 0)
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    return L.lm_logits(params["embed"], x[:, -1], cfg), cache
+
+
+def decode_step(params, cfg, token, cache, pos_idx):
+    B = token.shape[0]
+    x = L.embed_tokens(params["embed"], token, cfg.dtype)
+    pos = jnp.broadcast_to(pos_idx[None, None], (B, 1))
+    x, cache = _run(params, cfg, x, pos, cache, pos_idx)
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    return L.lm_logits(params["embed"], x[:, -1], cfg), cache
+
+
+def cache_axes(cfg: ModelConfig):
+    axes = []
+    for kind in layer_kinds(cfg):
+        if kind == "R":
+            axes.append({"h": ("batch", "inner"),
+                         "conv": ("batch", None, "inner")})
+        else:
+            kv = ("batch", "seq", "kv_heads", "head_dim")
+            axes.append({"k": kv, "v": kv})
+    return tuple(axes)

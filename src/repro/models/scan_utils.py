@@ -1,0 +1,81 @@
+"""Chunked linear-recurrence machinery shared by the SSM (mamba) and
+RG-LRU (recurrentgemma) families.
+
+The recurrence h_t = a_t ⊙ h_{t-1} + b_t is evaluated with a parallel
+associative scan *within* fixed-size chunks and a sequential carry
+*between* chunks: TPU-friendly (log-depth inside a chunk, O(S/chunk)
+sequential steps) and memory-friendly (only chunk-sized (a, b) tensors are
+alive; the chunk body is rematerialized under the layer checkpoint).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+# Analysis mode (set by launch/dryrun.py around the layer-extrapolation
+# probes): forces single-chunk execution so XLA cost analysis — which
+# counts a scan body only once — sees the full per-layer recurrence work.
+FULL_CHUNK_ANALYSIS = False
+
+
+def _combine(x, y):
+    a1, b1 = x
+    a2, b2 = y
+    return a1 * a2, a2 * b1 + b2
+
+
+def linear_recurrence(a: jax.Array, b: jax.Array, h0: jax.Array,
+                      chunk: int = 256) -> Tuple[jax.Array, jax.Array]:
+    """h_t = a_t ⊙ h_{t-1} + b_t along axis 1 (seq).
+
+    a, b: (B, S, ...); h0: (B, ...). Returns (h (B,S,...), h_last).
+    On TPU the elementwise (B, S, D) case routes through the fused
+    VMEM-resident Pallas kernel (kernels/linear_recurrence.py)."""
+    from repro.kernels import ops as _ops
+    if a.ndim == 3 and _ops._use_pallas() and a.shape[1] >= 8:
+        from repro.kernels.linear_recurrence import linear_recurrence_kernel
+        bs = 128 if a.shape[1] % 128 == 0 else a.shape[1]
+        bd = 256 if a.shape[2] % 256 == 0 else a.shape[2]
+        return linear_recurrence_kernel(
+            a, b, h0, block_s=bs, block_d=bd,
+            interpret=_ops._interpret())
+    B, S = a.shape[0], a.shape[1]
+    if FULL_CHUNK_ANALYSIS:
+        chunk = S
+    chunk = min(chunk, S)
+    if S % chunk != 0:  # fall back to one associative scan over the rest
+        chunk = S
+    n_chunks = S // chunk
+
+    ac = a.reshape((B, n_chunks, chunk) + a.shape[2:])
+    bc = b.reshape((B, n_chunks, chunk) + b.shape[2:])
+
+    def chunk_body(h_prev, xs):
+        a_k, b_k = xs                     # (B, chunk, ...)
+        # fold the carry into the first step: b'_0 = a_0 h_prev + b_0
+        b_k = b_k.at[:, 0].add(a_k[:, 0] * h_prev)
+        A, Bv = jax.lax.associative_scan(_combine, (a_k, b_k), axis=1)
+        return Bv[:, -1], Bv
+
+    h_last, hs = jax.lax.scan(chunk_body, h0,
+                              (jnp.moveaxis(ac, 1, 0), jnp.moveaxis(bc, 1, 0)))
+    hs = jnp.moveaxis(hs, 0, 1).reshape((B, S) + a.shape[2:])
+    return hs, h_last
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, state: jax.Array = None):
+    """Depthwise causal conv along seq. x (B, S, C); w (K, C);
+    state (B, K-1, C) carries the tail of the previous segment.
+    Returns (y (B, S, C), new_state (B, K-1, C))."""
+    B, S, C = x.shape
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((B, K - 1, C), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)  # (B, S+K-1, C)
+    y = jnp.zeros((B, S, C), x.dtype)
+    for i in range(K):  # K is 4 — unrolled taps beat a conv op here
+        y = y + xp[:, i : i + S] * w[i]
+    new_state = xp[:, S:]
+    return y, new_state

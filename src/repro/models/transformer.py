@@ -1,0 +1,139 @@
+"""Dense decoder-only transformer (qwen2-72b, command-r-35b, chatglm3-6b,
+starcoder2-7b, and the paper's llama2-7b).
+
+Layers are stacked along a leading "layers" axis and executed with
+``jax.lax.scan`` (compact HLO, fast multi-pod compiles) with optional
+full rematerialization. Supports sequential and parallel (command-r)
+residual blocks, GQA, RoPE variants, and KV-cache prefill/decode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def _build_layer(mk: L.Maker, cfg: ModelConfig) -> Dict:
+    p = {
+        "ln1": L.make_norm(mk, cfg),
+        "attn": L.make_attention(mk, cfg),
+        "mlp": L.make_mlp(mk, cfg),
+    }
+    if not cfg.parallel_block:
+        p["ln2"] = L.make_norm(mk, cfg)
+    return p
+
+
+def build(mk: L.Maker, cfg: ModelConfig) -> Dict:
+    return {
+        "embed": L.make_embedding(mk, cfg),
+        "layers": mk.stack(cfg.num_layers,
+                           functools.partial(_build_layer, cfg=cfg)),
+        "ln_f": L.make_norm(mk, cfg),
+    }
+
+
+def init(rng: jax.Array, cfg: ModelConfig) -> Dict:
+    return build(L.InitMaker(rng, cfg.dtype), cfg)
+
+
+def axes(cfg: ModelConfig) -> Dict:
+    return build(L.AxesMaker(), cfg)
+
+
+def _layer_fn(cfg: ModelConfig, x: jax.Array, pos: jax.Array, lp: Dict,
+              cache: Optional[Dict], cache_index) -> Tuple[jax.Array, Optional[Dict]]:
+    h = L.apply_norm(lp["ln1"], x, cfg)
+    attn_out, new_cache = L.apply_attention(
+        lp["attn"], cfg, h, pos, causal=True, cache=cache,
+        cache_index=cache_index)
+    if cfg.parallel_block:
+        mlp_out = L.apply_mlp(lp["mlp"], cfg, h)
+        x = x + attn_out + mlp_out
+    else:
+        x = x + attn_out
+        x = x + L.apply_mlp(lp["mlp"], cfg, L.apply_norm(lp["ln2"], x, cfg))
+    return x, new_cache
+
+
+def _run_layers(params: Dict, cfg: ModelConfig, x: jax.Array,
+                pos: jax.Array, cache: Optional[Dict], cache_index):
+    """Scan the stacked layers; threads per-layer cache slices through."""
+
+    from repro.parallel.act_sharding import constrain_residual
+
+    def body(carry, xs):
+        h = constrain_residual(carry)
+        lp, lcache = xs
+        out, new_cache = _layer_fn(cfg, h, pos, lp, lcache, cache_index)
+        return constrain_residual(out), new_cache
+
+    f = body
+    if cfg.remat:
+        f = jax.checkpoint(body,
+                           policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.scan_layers:
+        x, new_cache = jax.lax.scan(f, x, (params["layers"], cache))
+    else:
+        new_caches = []
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            lc = None if cache is None else jax.tree.map(lambda a: a[i], cache)
+            x, nc = f(x, (lp, lc))
+            new_caches.append(nc)
+        new_cache = None if cache is None else jax.tree.map(
+            lambda *xs: jnp.stack(xs), *new_caches)
+    return x, new_cache
+
+
+def forward(params: Dict, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    """Teacher-forced logits (B, S, V) — the training forward."""
+    B, S = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, cfg.dtype)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x, _ = _run_layers(params, cfg, x, pos, None, None)
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    return L.lm_logits(params["embed"], x, cfg)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    one = L.make_attn_cache(cfg, batch, max_len, dtype=cfg.dtype)
+    return jax.tree.map(
+        lambda a: jnp.zeros((cfg.num_layers,) + a.shape, a.dtype), one)
+
+
+def prefill(params: Dict, cfg: ModelConfig, tokens: jax.Array,
+            cache: Dict) -> Tuple[jax.Array, Dict]:
+    """Run the prompt through the model, filling the cache from position 0.
+    Returns (logits_last (B, V), cache)."""
+    B, S = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, cfg.dtype)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x, cache = _run_layers(params, cfg, x, pos, cache, 0)
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    return L.lm_logits(params["embed"], x[:, -1], cfg), cache
+
+
+def decode_step(params: Dict, cfg: ModelConfig, token: jax.Array,
+                cache: Dict, pos_idx: jax.Array) -> Tuple[jax.Array, Dict]:
+    """One-token decode. token (B, 1) int32; pos_idx () int32 — the cache
+    write position. Returns (logits (B, V), cache)."""
+    B = token.shape[0]
+    x = L.embed_tokens(params["embed"], token, cfg.dtype)
+    if hasattr(pos_idx, "ndim") and pos_idx.ndim == 1:   # per-slot (B,)
+        pos = pos_idx[:, None]
+    else:
+        pos = jnp.broadcast_to(pos_idx[None, None], (B, 1))
+    x, cache = _run_layers(params, cfg, x, pos, cache, pos_idx)
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    return L.lm_logits(params["embed"], x[:, -1], cfg), cache
+
+
+def cache_axes(cfg: ModelConfig):
+    kv = ("layers", "batch", "seq", "kv_heads", "head_dim")
+    return {"k": kv, "v": kv}

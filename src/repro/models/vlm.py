@@ -1,0 +1,80 @@
+"""Qwen2-VL-style VLM *backbone*: a dense GQA transformer with M-RoPE.
+
+Per the task spec, the vision frontend (ViT + dynamic-resolution patching)
+is a STUB: ``input_specs`` provides precomputed patch embeddings
+(B, P, d_model) which are prepended to the token embeddings, and 3-stream
+(t, h, w) M-RoPE position ids cover the merged sequence. The transformer
+stack is shared with :mod:`repro.models.transformer`.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+
+build = T.build
+init = T.init
+axes = T.axes
+init_cache = T.init_cache
+cache_axes = T.cache_axes
+
+
+def merge_embeds(params: Dict, cfg: ModelConfig, tokens: jax.Array,
+                 vision_embeds: Optional[jax.Array]) -> jax.Array:
+    x = L.embed_tokens(params["embed"], tokens, cfg.dtype)
+    if vision_embeds is not None:
+        x = jnp.concatenate([vision_embeds.astype(cfg.dtype), x], axis=1)
+    return x
+
+
+def default_positions(cfg: ModelConfig, batch: int, seq: int,
+                      start: int = 0) -> jax.Array:
+    """(3, B, S) identical t/h/w streams — the text-only M-RoPE case.
+    Real vision spans carry distinct h/w streams via input_specs."""
+    p = jnp.broadcast_to(jnp.arange(start, start + seq)[None], (batch, seq))
+    return jnp.broadcast_to(p[None], (3, batch, seq))
+
+
+def forward(params: Dict, cfg: ModelConfig, tokens: jax.Array,
+            vision_embeds: Optional[jax.Array] = None,
+            positions: Optional[jax.Array] = None) -> jax.Array:
+    """Teacher-forced logits over the merged (vision + text) sequence."""
+    B = tokens.shape[0]
+    x = merge_embeds(params, cfg, tokens, vision_embeds)
+    S = x.shape[1]
+    pos = positions if positions is not None \
+        else default_positions(cfg, B, S)
+    x, _ = T._run_layers(params, cfg, x, pos, None, None)
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    return L.lm_logits(params["embed"], x, cfg)
+
+
+def prefill(params: Dict, cfg: ModelConfig, tokens: jax.Array, cache: Dict,
+            vision_embeds: Optional[jax.Array] = None,
+            positions: Optional[jax.Array] = None) -> Tuple[jax.Array, Dict]:
+    B = tokens.shape[0]
+    x = merge_embeds(params, cfg, tokens, vision_embeds)
+    S = x.shape[1]
+    pos = positions if positions is not None \
+        else default_positions(cfg, B, S)
+    x, cache = T._run_layers(params, cfg, x, pos, cache, 0)
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    return L.lm_logits(params["embed"], x[:, -1], cfg), cache
+
+
+def decode_step(params: Dict, cfg: ModelConfig, token: jax.Array,
+                cache: Dict, pos_idx: jax.Array) -> Tuple[jax.Array, Dict]:
+    B = token.shape[0]
+    x = L.embed_tokens(params["embed"], token, cfg.dtype)
+    if hasattr(pos_idx, "ndim") and pos_idx.ndim == 1:   # per-slot (B,)
+        pos = jnp.broadcast_to(pos_idx[None, :, None], (3, B, 1))
+    else:
+        pos = jnp.broadcast_to(pos_idx[None, None, None], (3, B, 1))
+    x, cache = T._run_layers(params, cfg, x, pos, cache, pos_idx)
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    return L.lm_logits(params["embed"], x[:, -1], cfg), cache

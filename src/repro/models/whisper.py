@@ -1,0 +1,230 @@
+"""Whisper-large-v3-style encoder-decoder *backbone* (audio).
+
+Per the task spec the conv/mel frontend is a STUB: ``input_specs``
+provides precomputed frame embeddings (B, frames, d_model). The encoder
+is a bidirectional pre-LN transformer with sinusoidal positions; the
+decoder has causal self-attention (KV cache), cross-attention over the
+encoder output (K/V computed once at prefill and cached), learned
+positions, and tied embeddings — all per the Whisper architecture.
+Both stacks scan over stacked layers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def _sinusoid(length: int, dim: int) -> jax.Array:
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    div = jnp.exp(-jnp.log(10000.0) * jnp.arange(0, dim, 2, jnp.float32) / dim)
+    ang = pos * div
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _build_enc_layer(mk, cfg):
+    return {
+        "ln1": L.make_norm(mk, cfg),
+        "attn": L.make_attention(mk, cfg),
+        "ln2": L.make_norm(mk, cfg),
+        "mlp": L.make_mlp(mk, cfg),
+    }
+
+
+def _build_dec_layer(mk, cfg):
+    return {
+        "ln1": L.make_norm(mk, cfg),
+        "self_attn": L.make_attention(mk, cfg),
+        "ln2": L.make_norm(mk, cfg),
+        "cross_attn": L.make_attention(mk, cfg, cross=True),
+        "ln3": L.make_norm(mk, cfg),
+        "mlp": L.make_mlp(mk, cfg),
+    }
+
+
+def build(mk: L.Maker, cfg: ModelConfig) -> Dict:
+    return {
+        "embed": L.make_embedding(mk, cfg),
+        "pos_dec": mk.param("pos_dec", (4096 * 16, cfg.d_model),
+                            (None, "embed"), scale=0.02),
+        "enc_layers": mk.stack(cfg.encoder_layers,
+                               functools.partial(_build_enc_layer, cfg=cfg)),
+        "ln_enc": L.make_norm(mk, cfg),
+        "dec_layers": mk.stack(cfg.num_layers,
+                               functools.partial(_build_dec_layer, cfg=cfg)),
+        "ln_f": L.make_norm(mk, cfg),
+    }
+
+
+def init(rng, cfg):
+    return build(L.InitMaker(rng, cfg.dtype), cfg)
+
+
+def axes(cfg):
+    return build(L.AxesMaker(), cfg)
+
+
+# ---------------------------------------------------------------------------
+# Encoder
+# ---------------------------------------------------------------------------
+
+def encode(params: Dict, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """frames (B, F, d_model) — stub-frontend output — → (B, F, d_model)."""
+    B, F, _ = frames.shape
+    x = frames.astype(cfg.dtype) + _sinusoid(F, cfg.d_model).astype(cfg.dtype)
+    pos = jnp.broadcast_to(jnp.arange(F)[None], (B, F))
+
+    from repro.parallel.act_sharding import constrain_residual
+
+    def body(carry, lp):
+        carry = constrain_residual(carry)
+        h = L.apply_norm(lp["ln1"], carry, cfg)
+        attn, _ = L.apply_attention(lp["attn"], cfg, h, pos, causal=False,
+                                    use_rope=False)
+        x2 = carry + attn
+        x2 = x2 + L.apply_mlp(lp["mlp"], cfg,
+                              L.apply_norm(lp["ln2"], x2, cfg))
+        return x2, None
+
+    f = body
+    if cfg.remat:
+        f = jax.checkpoint(body,
+                           policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(f, x, params["enc_layers"])
+    else:
+        for i in range(cfg.encoder_layers):
+            lp = jax.tree.map(lambda a: a[i], params["enc_layers"])
+            x, _ = f(x, lp)
+    return L.apply_norm(params["ln_enc"], x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Decoder
+# ---------------------------------------------------------------------------
+
+def _dec_layer(cfg, x, lp, enc_kv, self_cache, cache_index, pos):
+    """enc_kv: dict {"k","v"} (B, F, H, D) — precomputed cross K/V."""
+    B, S, _ = x.shape
+    H, D = cfg.num_heads, cfg.head_dim_
+    h = L.apply_norm(lp["ln1"], x, cfg)
+    sa, new_cache = L.apply_attention(lp["self_attn"], cfg, h, pos,
+                                      causal=True, cache=self_cache,
+                                      cache_index=cache_index,
+                                      use_rope=False)
+    x = x + sa
+    # cross-attention against cached encoder K/V
+    h = L.apply_norm(lp["ln2"], x, cfg)
+    q = L.apply_linear(lp["cross_attn"]["wq"], h, cfg).reshape(B, S, H, D)
+    qh = jnp.swapaxes(q, 1, 2)
+    kh = jnp.swapaxes(enc_kv["k"], 1, 2)
+    vh = jnp.swapaxes(enc_kv["v"], 1, 2)
+    from repro.kernels import ops
+    ca = ops.attention(qh, kh, vh, causal=False,
+                       use_lut=cfg.use_lut_softmax)
+    ca = jnp.swapaxes(ca, 1, 2).reshape(B, S, H * D).astype(x.dtype)
+    x = x + L.apply_linear(lp["cross_attn"]["wo"], ca, cfg)
+    x = x + L.apply_mlp(lp["mlp"], cfg, L.apply_norm(lp["ln3"], x, cfg))
+    return x, new_cache
+
+
+def cross_kv(params: Dict, cfg: ModelConfig, enc_out: jax.Array) -> Dict:
+    """Precompute per-layer cross K/V (the decode-time cross cache)."""
+    B, F, _ = enc_out.shape
+    Hkv, D = cfg.num_kv_heads, cfg.head_dim_
+
+    def one(lp):
+        k = L.apply_linear(lp["cross_attn"]["wk"], enc_out, cfg)
+        v = L.apply_linear(lp["cross_attn"]["wv"], enc_out, cfg)
+        return {"k": k.reshape(B, F, Hkv, D), "v": v.reshape(B, F, Hkv, D)}
+
+    return jax.vmap(one)(params["dec_layers"])
+
+
+def _run_decoder(params, cfg, x, pos, enc_kv, cache, cache_index):
+    from repro.parallel.act_sharding import constrain_residual
+
+    def body(carry, xs):
+        lp, ekv, lcache = xs
+        out, nc = _dec_layer(cfg, constrain_residual(carry), lp, ekv,
+                             lcache, cache_index, pos)
+        return constrain_residual(out), nc
+
+    f = body
+    if cfg.remat:
+        f = jax.checkpoint(body,
+                           policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.scan_layers:
+        return jax.lax.scan(f, x, (params["dec_layers"], enc_kv, cache))
+    new_caches = []
+    for i in range(cfg.num_layers):
+        xs = jax.tree.map(lambda a: a[i],
+                          (params["dec_layers"], enc_kv, cache))
+        x, nc = f(x, xs)
+        new_caches.append(nc)
+    nc = None if cache is None else jax.tree.map(
+        lambda *ys: jnp.stack(ys), *new_caches)
+    return x, nc
+
+
+def forward(params: Dict, cfg: ModelConfig, tokens: jax.Array,
+            frames: jax.Array) -> jax.Array:
+    """Teacher-forced decoder logits given stub-frontend frames."""
+    B, S = tokens.shape
+    enc_out = encode(params, cfg, frames)
+    ekv = cross_kv(params, cfg, enc_out)
+    x = L.embed_tokens(params["embed"], tokens, cfg.dtype)
+    x = x + params["pos_dec"][:S].astype(cfg.dtype)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x, _ = _run_decoder(params, cfg, x, pos, ekv, None, None)
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    return L.lm_logits(params["embed"], x, cfg)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    one = L.make_attn_cache(cfg, batch, max_len, dtype=cfg.dtype)
+    self_c = jax.tree.map(
+        lambda a: jnp.zeros((cfg.num_layers,) + a.shape, a.dtype), one)
+    F = cfg.encoder_seq
+    kv = (cfg.num_layers, batch, F, cfg.num_kv_heads, cfg.head_dim_)
+    return {"self": self_c,
+            "cross": {"k": jnp.zeros(kv, cfg.dtype),
+                      "v": jnp.zeros(kv, cfg.dtype)}}
+
+
+def prefill(params: Dict, cfg: ModelConfig, tokens: jax.Array, cache: Dict,
+            frames: jax.Array) -> Tuple[jax.Array, Dict]:
+    B, S = tokens.shape
+    enc_out = encode(params, cfg, frames)
+    ekv = cross_kv(params, cfg, enc_out)
+    x = L.embed_tokens(params["embed"], tokens, cfg.dtype)
+    x = x + params["pos_dec"][:S].astype(cfg.dtype)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x, self_c = _run_decoder(params, cfg, x, pos, ekv, cache["self"], 0)
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    return (L.lm_logits(params["embed"], x[:, -1], cfg),
+            {"self": self_c, "cross": ekv})
+
+
+def decode_step(params: Dict, cfg: ModelConfig, token: jax.Array,
+                cache: Dict, pos_idx: jax.Array) -> Tuple[jax.Array, Dict]:
+    B = token.shape[0]
+    x = L.embed_tokens(params["embed"], token, cfg.dtype)
+    x = x + jax.lax.dynamic_slice_in_dim(
+        params["pos_dec"], pos_idx, 1, 0).astype(cfg.dtype)
+    pos = jnp.broadcast_to(pos_idx[None, None], (B, 1))
+    x, self_c = _run_decoder(params, cfg, x, pos, cache["cross"],
+                             cache["self"], pos_idx)
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    return (L.lm_logits(params["embed"], x[:, -1], cfg),
+            {"self": self_c, "cross": cache["cross"]})
+
+
+def cache_axes(cfg: ModelConfig):
+    kv = ("layers", "batch", "seq", "kv_heads", "head_dim")
+    return {"self": {"k": kv, "v": kv}, "cross": {"k": kv, "v": kv}}

@@ -1,0 +1,57 @@
+"""Activation sharding constraints (Megatron-SP style).
+
+Between transformer blocks the residual stream (B, S, d) is constrained
+to batch-over-("pod","data") × seq-over-"model": the rematerialization
+carry saved per layer is then 1/TP of the naive size (the difference
+between fitting and not fitting HBM for the 72B train cell — see
+EXPERIMENTS.md §Perf), and GSPMD derives the Megatron sequence-parallel
+all-gather/reduce-scatter pattern around attention/MLP automatically.
+
+Constraints are best-effort: outside a mesh context (CPU unit tests) they
+no-op, and a dim that is too small to be worth sharding is left alone.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _ambient_mesh():
+    m = jax.sharding.get_abstract_mesh()
+    return m if m is not None and m.shape else None
+
+
+def constrain_residual(x: jax.Array) -> jax.Array:
+    """x (B, S, d) → sharding constraint (batch→pod/data, seq→model)."""
+    mesh = _ambient_mesh()
+    if mesh is None or x.ndim != 3:
+        return x
+    axes = dict(mesh.shape)
+    batch_axes = tuple(a for a in ("pod", "data") if a in axes)
+    b_ok = batch_axes and x.shape[0] % _prod(axes, batch_axes) == 0
+    model_ok = "model" in axes and x.shape[1] % axes["model"] == 0 \
+        and x.shape[1] >= 8 * axes["model"]
+    if not (b_ok or model_ok):
+        return x
+    spec = P(batch_axes if b_ok else None,
+             "model" if model_ok else None, None)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_batch_only(x: jax.Array) -> jax.Array:
+    mesh = _ambient_mesh()
+    if mesh is None or x.ndim < 1:
+        return x
+    axes = dict(mesh.shape)
+    batch_axes = tuple(a for a in ("pod", "data") if a in axes)
+    if not batch_axes or x.shape[0] % _prod(axes, batch_axes) != 0:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, P(batch_axes, *([None] * (x.ndim - 1))))
+
+
+def _prod(axes, names):
+    out = 1
+    for n in names:
+        out *= axes[n]
+    return out

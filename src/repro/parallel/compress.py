@@ -1,0 +1,76 @@
+"""Compressed cross-pod gradient reduction.
+
+On the multi-pod mesh the "pod" axis rides DCN (an order of magnitude
+slower than ICI), so the pod-level gradient all-reduce is the scaling
+bottleneck at 1000+ nodes. ``compressed_psum_pod`` performs the pod
+all-reduce in int8 with per-chunk scales under ``shard_map`` — an ~2×
+(bf16) / ~4× (f32) wire-byte reduction with bounded quantization error
+(error-feedback residual optional at the trainer level).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def _quantize_chunked(x: jax.Array, chunk: int = 4096):
+    flat = x.reshape(-1)
+    pad = (-flat.size) % chunk
+    flat = jnp.pad(flat, (0, pad))
+    c = flat.reshape(-1, chunk)
+    scale = jnp.max(jnp.abs(c), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(c / scale), -127, 127).astype(jnp.int8)
+    return q, scale, pad
+
+
+def _dequantize_chunked(q, scale, pad, shape):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    if pad:
+        flat = flat[:-pad] if pad else flat
+    return flat.reshape(shape)
+
+
+def compressed_psum(x: jax.Array, axis_name: str) -> jax.Array:
+    """int8-compressed psum over ``axis_name`` (call inside shard_map).
+
+    Each participant quantizes its local tensor to int8 + per-chunk f32
+    scales, all-gathers the compact representation over the (slow) axis,
+    dequantizes and sums locally — total wire bytes ≈ N·(bytes/4 + scale
+    overhead) instead of the 2·bytes ring all-reduce."""
+    q, scale, pad = _quantize_chunked(x)
+    qg = jax.lax.all_gather(q, axis_name)          # (N, chunks, chunk) int8
+    sg = jax.lax.all_gather(scale, axis_name)
+    parts = qg.astype(jnp.float32) * sg
+    total = jnp.sum(parts, axis=0)
+    flat = total.reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(x.shape)
+
+
+def make_pod_grad_reducer(mesh: Mesh, grad_specs):
+    """Returns f(grads)→grads that all-reduces over the "pod" axis with
+    int8 compression, leaving intra-pod reduction to GSPMD. No-op when
+    the mesh has no pod axis."""
+    if "pod" not in mesh.shape:
+        return lambda g: g
+
+    def reduce_leaf(spec):
+        @functools.partial(
+            shard_map, mesh=mesh,
+            in_specs=(spec,), out_specs=spec, check_rep=False)
+        def f(g):
+            return compressed_psum(g, "pod") / mesh.shape["pod"]
+        return f
+
+    def reducer(grads):
+        return jax.tree.map(
+            lambda g, s: reduce_leaf(s)(g), grads, grad_specs)
+
+    return reducer

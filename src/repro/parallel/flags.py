@@ -1,0 +1,23 @@
+"""Optimization flags (EXPERIMENTS.md §Perf).
+
+The hillclimbed optimizations are framework DEFAULTS; each can be
+disabled for A/B against the paper-faithful baseline:
+
+  REPRO_OPT_FLASH=0    materialized-score attention oracle (baseline)
+  REPRO_OPT_SEQKV=0    head-dim-sharded KV cache (baseline decode layout)
+  REPRO_OPT_EPMODEL=0  experts sharded over "data" (baseline MoE layout)
+  REPRO_OPT_GRADRS=1   pin grads to the param sharding (measured no-op:
+                       GSPMD already propagates it — §Perf, refuted)
+  REPRO_BASELINE=1     all of the above at once
+  REPRO_OPT_EPMOE=1    (refuted ablation) pin dispatched tokens E→"data"
+"""
+import os
+
+
+def opt(name: str, default: bool = True) -> bool:
+    if os.environ.get("REPRO_BASELINE") == "1":
+        return False
+    v = os.environ.get(f"REPRO_OPT_{name}")
+    if v is None:
+        return default
+    return v == "1"

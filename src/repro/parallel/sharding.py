@@ -1,0 +1,161 @@
+"""Logical-axis sharding: map the model's logical axis names onto mesh
+axes with divisibility-aware fallback.
+
+Rules are *priority lists*: for each logical axis we try candidate mesh
+axes in order, skipping candidates already used by another dim of the
+same tensor (a mesh axis may appear at most once in a PartitionSpec) and
+candidates that do not divide the dim (jit in_shardings rejects uneven
+sharding, so e.g. whisper's 20 KV heads on a 16-way model axis fall
+through to sharding head_dim instead).
+
+Two rule sets:
+  * TRAIN — FSDP-style: batch over (pod, data); TP over "model" on
+    vocab/qkv/mlp/inner; params additionally sharded over "data" on the
+    "embed" dim (and experts over "data") so 480B-class params +
+    optimizer state fit the pod.
+  * SERVE — weights sharded over "model" only (embed replicated) for
+    latency; experts still over "data"; caches over batch (+ head dims
+    over "model").
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.layers import is_axes_leaf
+
+Rules = Dict[str, Tuple[Tuple[str, ...], ...]]
+
+TRAIN_RULES: Rules = {
+    "batch": ((("pod", "data")), ("data",)),
+    "vocab": (("model",),),
+    "qkv": (("model",),),
+    "kv": (("model",),),
+    "mlp": (("model",),),
+    "inner": (("model",), ("data",)),
+    "heads": (("model",),),
+    "experts": (("data",), ("model",)),
+    "embed": (("data",),),            # FSDP
+    # (experts→model variant selectable via REPRO_OPT_EPMODEL — §Perf)
+    "kv_heads": (("model",),),
+    "head_dim": (("model",),),
+    "seq": (),
+    "layers": (),
+    "state": (),
+}
+
+SERVE_RULES: Rules = dict(TRAIN_RULES)
+SERVE_RULES.update({
+    "embed": (),                       # replicate: decode latency path
+    "experts": (("data",), ("model",)),
+})
+
+# Flash-decoding layout (REPRO_OPT_SEQKV=1, EXPERIMENTS.md §Perf): the KV
+# cache's SEQ dim is sharded over "model" instead of head_dim. Each TP
+# rank attends over its sequence shard with a local online-softmax; only
+# the tiny (B,H,1) max/denominator and (B,H,1,D) partial products cross
+# the mesh — instead of all-reducing S-length partial-D score tensors.
+DECODE_RULES: Rules = dict(SERVE_RULES)
+DECODE_RULES.update({
+    "seq": (("model",),),
+    "kv_heads": (),
+    "head_dim": (),
+})
+
+
+def decode_rules() -> Rules:
+    from repro.parallel.flags import opt
+    return DECODE_RULES if opt("SEQKV") else SERVE_RULES
+
+
+def train_rules() -> Rules:
+    """TRAIN_RULES, with the expert dim on "model" (the §Perf-winning EP
+    layout; gradient all-reduces of expert weights shrink 2.6x and the
+    dispatch lowers to true all-to-all). REPRO_OPT_EPMODEL=0 restores
+    the baseline experts→"data" layout."""
+    from repro.parallel.flags import opt
+    if opt("EPMODEL"):
+        r = dict(TRAIN_RULES)
+        r["experts"] = (("model",),)
+        return r
+    return TRAIN_RULES
+
+
+def _normalize(cand) -> Tuple[str, ...]:
+    return (cand,) if isinstance(cand, str) else tuple(cand)
+
+
+def spec_for(axes: Tuple[Optional[str], ...], shape: Tuple[int, ...],
+             mesh: Mesh, rules: Rules) -> P:
+    """PartitionSpec for one tensor given its logical axes and shape."""
+    assert len(axes) == len(shape), (axes, shape)
+    used = set()
+    parts = []
+    for name, size in zip(axes, shape):
+        assigned = None
+        for cand in rules.get(name, ()) if name else ():
+            cand_t = _normalize(cand)
+            if any(a in used for a in cand_t):
+                continue
+            if any(a not in mesh.shape for a in cand_t):
+                continue
+            total = math.prod(mesh.shape[a] for a in cand_t)
+            if size % total == 0:
+                assigned = cand_t
+                break
+        # NOTE: jit in_shardings rejects uneven (padded) sharding, so a
+        # non-divisible dim falls through to the next logical axis (e.g.
+        # kv_heads=8 on a 16-way model axis → head_dim carries the TP
+        # sharding of the KV cache instead).
+        if assigned is None:
+            parts.append(None)
+        else:
+            used.update(assigned)
+            parts.append(assigned[0] if len(assigned) == 1 else assigned)
+    return P(*parts)
+
+
+def tree_shardings(mesh: Mesh, axes_tree, shape_tree, rules: Rules):
+    """NamedSharding pytree for (axes_tree, shape_tree) — shape_tree is a
+    ShapeDtypeStruct tree (e.g. from jax.eval_shape)."""
+    flat_axes = jax.tree.leaves(axes_tree, is_leaf=is_axes_leaf)
+    flat_shapes, treedef = jax.tree.flatten(shape_tree)
+    assert len(flat_axes) == len(flat_shapes), \
+        (len(flat_axes), len(flat_shapes))
+    shardings = [NamedSharding(mesh, spec_for(a, s.shape, mesh, rules))
+                 for a, s in zip(flat_axes, flat_shapes)]
+    return jax.tree.unflatten(treedef, shardings)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def batch_specs(batch_tree, mesh: Mesh, rules: Rules):
+    """Shardings for a data batch: leading dim is batch (or the (3,B,S)
+    position tensors where dim 1 is batch)."""
+
+    def one(x):
+        nd = len(x.shape)
+        b_axis = 1 if nd == 3 and x.shape[0] == 3 else 0   # (3,B,S) posns
+        cand = None
+        for c in rules["batch"]:
+            c_t = _normalize(c)
+            if all(a in mesh.shape for a in c_t) and \
+                    x.shape[b_axis] % math.prod(mesh.shape[a] for a in c_t) == 0:
+                cand = c_t
+                break
+        parts = [None] * nd
+        if cand is not None:
+            parts[b_axis] = cand[0] if len(cand) == 1 else cand
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree.map(one, batch_tree)
+
+
+def cache_shardings(mesh: Mesh, cache_axes_tree, cache_shape_tree,
+                    rules: Rules):
+    return tree_shardings(mesh, cache_axes_tree, cache_shape_tree, rules)

@@ -1,0 +1,109 @@
+"""Batched serving engine: prefill + decode with KV caches, greedy /
+temperature sampling, and the paper's deployment configuration (W4A8
+weights through the WS-OCS kernel path, LUT group-softmax, fused norms).
+
+``quantize_params`` converts every 2-D linear weight into the serving
+QuantizedWeight dict that ``layers.apply_linear`` routes through
+``ops.ws_ocs_matmul`` — the INT4 weight-streaming pipeline the paper
+builds silicon for.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.quant import QuantConfig, quantize_weight
+from repro.models import api
+from repro.models.layers import is_axes_leaf
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0           # 0 → greedy
+    seed: int = 0
+
+
+def _quantize_one(w, qc: QuantConfig) -> Dict:
+    qw = quantize_weight(w, qc)
+    return {"q": qw.data, "scale": qw.scale}
+
+
+def quantize_params(params: Dict, cfg: ModelConfig,
+                    axes: Optional[Dict] = None) -> Dict:
+    """Quantize every matmul weight (leaves named 'w': plain 2-D or
+    layer-stacked 3-D) per cfg.quant_mode. The bit-width travels in the
+    dtype (uint8 = nibble-packed INT4, int8 = INT8) so the quantized dict
+    scans cleanly over layers. Norm scales / biases / embeddings stay
+    high precision (the paper keeps nonlinear paths FP16)."""
+    if cfg.quant_mode == "bf16":
+        return params
+    qc = QuantConfig(cfg.quant_mode, cfg.quant_group)
+
+    def walk(node):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if k == "w" and hasattr(v, "ndim") and v.ndim == 2 \
+                        and v.shape[0] % 2 == 0:
+                    out[k] = _quantize_one(v, qc)
+                elif k == "w" and hasattr(v, "ndim") and v.ndim == 3 \
+                        and v.shape[1] % 2 == 0:
+                    out[k] = jax.vmap(lambda w2: _quantize_one(w2, qc))(v)
+                else:
+                    out[k] = walk(v)
+            return out
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        return node
+
+    return walk(params)
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params: Dict, max_len: int = 512):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self._prefill = jax.jit(
+            lambda p, b, c: api.prefill_step(p, cfg, b, c))
+        self._decode = jax.jit(
+            lambda p, t, c, i: api.serve_step(p, cfg, t, c, i))
+
+    def generate(self, tokens: np.ndarray, sc: ServeConfig,
+                 extra_batch: Optional[Dict] = None) -> np.ndarray:
+        """tokens (B, S_prompt) int32 → (B, S_prompt + max_new) int32."""
+        B, S = tokens.shape
+        cache = api.init_cache(self.cfg, B, self.max_len)
+        batch = {"tokens": jnp.asarray(tokens)}
+        if extra_batch:
+            batch.update({k: jnp.asarray(v) for k, v in extra_batch.items()})
+        logits, cache = self._prefill(self.params, batch, cache)
+
+        rng = jax.random.PRNGKey(sc.seed)
+        out = [jnp.asarray(tokens)]
+        pos0 = S + (self.cfg.vision_patches
+                    if self.cfg.family == "vlm" and "vision_embeds" in batch
+                    else 0)
+        tok = self._sample(logits, rng, sc, 0)
+        for i in range(sc.max_new_tokens):
+            out.append(tok)
+            if i == sc.max_new_tokens - 1:
+                break
+            logits, cache = self._decode(self.params, tok, cache,
+                                         jnp.asarray(pos0 + i, jnp.int32))
+            tok = self._sample(logits, rng, sc, i + 1)
+        return np.asarray(jnp.concatenate(out, axis=1))
+
+    @staticmethod
+    def _sample(logits: jax.Array, rng, sc: ServeConfig, i: int):
+        if sc.temperature <= 0.0:
+            return jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        key = jax.random.fold_in(rng, i)
+        return jax.random.categorical(
+            key, logits / sc.temperature, -1)[:, None].astype(jnp.int32)

@@ -1,0 +1,68 @@
+"""Hardware constants.
+
+``RCWCIM`` — the paper's chip (TSMC 22 nm, 100 MHz, dual DDR5-6400): used
+by the performance model that reproduces Table II / Fig 8 / Fig 9.
+
+``TPU_V5E`` — the dry-run roofline target (197 TFLOP/s bf16, 819 GB/s
+HBM, ~50 GB/s/link ICI) per the task spec.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class RCWCIMChip:
+    # --- organization (paper Fig 2/3) ---
+    clusters: int = 8
+    cores_per_cluster: int = 4
+    banks_per_core: int = 8
+    macs_per_bank: int = 32
+    freq_hz: float = 100e6
+    # --- memory ---
+    macro_kb: int = 256                 # per-core CIM macro (Table II)
+    input_buf_kb: int = 64              # per-cluster input-reuse buffer
+    psum_buf_kb: int = 64               # per-cluster partial-sum buffer
+    dram_gbps: float = 2 * 51.2         # dual DDR5-6400 (51.2 GB/s each)
+    # --- precisions ---
+    weight_bits: int = 4
+    act_bits: int = 8
+    nl_bits: int = 16                   # FP16 nonlinear path
+    # --- energy (fitted to Table II's 42.3 TOPS/W at INT4×INT8) ---
+    tops_per_watt: float = 42.3
+
+    @property
+    def total_macs(self) -> int:
+        return (self.clusters * self.cores_per_cluster
+                * self.banks_per_core * self.macs_per_bank)
+
+    @property
+    def peak_tops(self) -> float:
+        """Dual-INT4 mode: each INT8 MAC lane does 2 INT4 MACs/cycle.
+        8×4×8×32 = 8192 MACs × 2 (dual int4) × 2 ops × 100 MHz
+        = 3.28 TOPS — Table II."""
+        return self.total_macs * 2 * 2 * self.freq_hz / 1e12
+
+    @property
+    def peak_ops_per_s(self) -> float:
+        return self.peak_tops * 1e12
+
+    @property
+    def macro_total_bytes(self) -> int:
+        """Total CIM weight capacity (32 macros × 256 KB)."""
+        return (self.clusters * self.cores_per_cluster
+                * self.macro_kb * 1024)
+
+
+@dataclasses.dataclass(frozen=True)
+class TPUChip:
+    name: str = "v5e"
+    peak_bf16_flops: float = 197e12
+    hbm_bytes_per_s: float = 819e9
+    ici_bytes_per_s_per_link: float = 50e9
+    hbm_bytes: int = 16 * 1024**3
+    vmem_bytes: int = 128 * 1024**2    # ~128 MB VMEM on v5e
+
+
+RCWCIM = RCWCIMChip()
+TPU_V5E = TPUChip()

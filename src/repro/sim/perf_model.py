@@ -1,0 +1,221 @@
+"""Analytical RCW-CIM performance model — reproduces the paper's headline
+numbers (Table II, Fig 8, Fig 9) from first-principles components plus a
+small number of FITTED constants (each listed below with its physical
+interpretation). Where the paper's figures are mutually over-determining,
+the residual to the published number is reported by the benchmarks rather
+than hidden (all within ~1.5 pp).
+
+Fitted constants (derived in EXPERIMENTS.md §Paper-validation):
+  * CIM_WRITE_BW      = 102.4 GB/s — multi-macro parallel weight-update
+    rate, provisioned to match the dual-DDR5 stream (32 macros ×
+    32 B/cycle @ 100 MHz); the decode-time update cost RCW hides.
+  * STALL_WRITE_BW    ≈ 6.08 GB/s — baseline (non-RCW) *array-stall*
+    write rate during prefill: without RCW the array cannot compute while
+    being written, so each WS-OS weight re-load stalls the MACs.
+  * NL_FUSED_RATE     ≈ 11.7 FP16 elems/cycle — group softmax/RMSNorm
+    with LUT-64 + partial accumulation across 8 banks.
+  * NL_BASE_RATE      ≈ 0.227 elems/cycle — prior-work CIM nonlinear path
+    (full accumulation only, global dependencies).
+  * MAC_UTIL          = 0.94 — prefill MXU/array utilization.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+from repro.core.dataflow import Dataflow, TileConfig, access_counts
+from repro.core.rcw import latency_rcw, latency_serial, RCWStage
+from repro.sim.chip import RCWCIM, RCWCIMChip
+
+CIM_WRITE_BW = 102.4e9   # provisioned to match the dual-DDR5 stream rate
+STALL_WRITE_BW = 6.083e9
+NL_FUSED_RATE = 11.7
+NL_BASE_RATE = 0.227
+MAC_UTIL = 0.94
+
+# WS-OCS tile geometry fitted to Fig 8 (m from the 87.6 % update claim,
+# k=n=256 = bank geometry; gives 50.4 % vs the published 51.6 %):
+TILE_M, TILE_N, TILE_K = 128, 256, 256
+
+
+@dataclasses.dataclass(frozen=True)
+class LlamaGeom:
+    """Llama2-7B GEMM set: (N=d_in, K=d_out, count per layer)."""
+    layers: int = 32
+    d_model: int = 4096
+    d_ff: int = 11008
+    vocab: int = 32000
+    heads: int = 32
+
+    @property
+    def gemms(self) -> List[Tuple[int, int, int]]:
+        d, f = self.d_model, self.d_ff
+        return [(d, d, 4), (d, f, 2), (f, d, 1)]
+
+    @property
+    def matmul_params(self) -> int:
+        return self.layers * sum(n * k * c for n, k, c in self.gemms)
+
+    def weight_bytes(self, bits: int = 4) -> float:
+        return self.matmul_params * bits / 8
+
+    def nl_elems_per_token(self, ctx: int = 1024) -> float:
+        d, f = self.d_model, self.d_ff
+        per_layer = 2 * d * 2 + self.heads * ctx + f   # 2×RMSNorm, softmax, SiLU
+        return self.layers * per_layer + d
+
+
+GEOM = LlamaGeom()
+
+
+# ---------------------------------------------------------------------------
+# Component times
+# ---------------------------------------------------------------------------
+
+def t_dram_weights(chip: RCWCIMChip = RCWCIM, bits: int = 4) -> float:
+    return GEOM.weight_bytes(bits) / (chip.dram_gbps * 1e9)
+
+
+def t_mac_per_token(chip: RCWCIMChip = RCWCIM) -> float:
+    return 2 * GEOM.matmul_params / chip.peak_ops_per_s
+
+
+def t_nl_per_token(fused: bool, ctx: int = 1024,
+                   chip: RCWCIMChip = RCWCIM) -> float:
+    rate = NL_FUSED_RATE if fused else NL_BASE_RATE
+    return GEOM.nl_elems_per_token(ctx) / (rate * chip.freq_hz)
+
+
+# ---------------------------------------------------------------------------
+# Decode (per-token) latency — Fig 9(b)
+# ---------------------------------------------------------------------------
+
+def decode_latency(rcw: bool, fusion: bool, ctx: int = 1024,
+                   chip: RCWCIMChip = RCWCIM,
+                   write_bw: float = None) -> float:
+    """Per-token decode latency. Baseline (no RCW): DRAM stream, CIM
+    write, MAC, and nonlinear all serialize. RCW's Phase-2 concurrency
+    overlaps the CIM write with the DRAM stream (streaming write) and
+    with MAC + NL execution, leaving max(stream, write) + compute;
+    fusion switches the NL path to the group/LUT/partial-accum rate."""
+    t_dram = t_dram_weights(chip)
+    t_upd = GEOM.weight_bytes() / (write_bw or CIM_WRITE_BW)
+    t_mac = t_mac_per_token(chip)
+    t_nl = t_nl_per_token(fusion, ctx, chip)
+    if rcw:
+        return max(t_dram, t_upd) + t_mac + t_nl
+    return t_dram + t_upd + t_mac + t_nl
+
+
+def decode_tokens_per_s(rcw: bool = True, fusion: bool = True,
+                        ctx: int = 1024) -> float:
+    return 1.0 / decode_latency(rcw, fusion, ctx)
+
+
+# ---------------------------------------------------------------------------
+# Prefill — Fig 9(a), Fig 8
+# ---------------------------------------------------------------------------
+
+def prefill_dram_bytes(df: Dataflow, tokens: int = 1024) -> float:
+    """External DRAM bytes for one 1024-token prefill (Table-I formulas
+    over the Llama GEMM set; INT8 activations, INT4 weights)."""
+    total = 0.0
+    for N, K, cnt in GEOM.gemms:
+        tc = TileConfig(M=tokens, N=N, K=K,
+                        m=min(TILE_M, tokens), n=min(TILE_N, N),
+                        k=min(TILE_K, K))
+        c = access_counts(df, tc)
+        total += (c["input"] * 1.0 + c["weight"] * 0.5
+                  + c["output"] * 1.0) * cnt * GEOM.layers
+    return total
+
+
+def prefill_update_bytes(df: Dataflow, tokens: int = 1024) -> float:
+    total = 0.0
+    for N, K, cnt in GEOM.gemms:
+        tc = TileConfig(M=tokens, N=N, K=K,
+                        m=min(TILE_M, tokens), n=min(TILE_N, N),
+                        k=min(TILE_K, K))
+        total += access_counts(df, tc)["cim_update"] * 0.5 * cnt * GEOM.layers
+    return total
+
+
+def prefill_latency(df: Dataflow, tokens: int = 1024, rcw: bool = True,
+                    chip: RCWCIMChip = RCWCIM) -> float:
+    """Prefill latency for `tokens`. Compute overlaps DRAM streaming
+    (double-buffered input/psum), so latency = max(MAC, DRAM) + exposed
+    weight-update stalls. With RCW + WS-OCS the NK update stream hides
+    behind compute; without RCW every update stalls the array at the
+    fitted STALL_WRITE_BW."""
+    t_mac = t_mac_per_token(chip) * tokens / MAC_UTIL
+    t_dram = prefill_dram_bytes(df, tokens) / (chip.dram_gbps * 1e9)
+    upd = prefill_update_bytes(df, tokens)
+    if rcw and df == Dataflow.WS_OCS:
+        exposed = 0.0                       # NK stream ≪ compute; hidden
+    else:
+        exposed = upd / STALL_WRITE_BW
+    return max(t_mac, t_dram) + exposed
+
+
+def prefill_per_token_ms(tokens: int = 1024) -> float:
+    return prefill_latency(Dataflow.WS_OCS, tokens) / tokens * 1e3
+
+
+# ---------------------------------------------------------------------------
+# Figure/Table reproductions
+# ---------------------------------------------------------------------------
+
+def fig8a_dram_reduction(tokens: int = 1024) -> Dict[str, float]:
+    ws = prefill_dram_bytes(Dataflow.WS, tokens)
+    ocs = prefill_dram_bytes(Dataflow.WS_OCS, tokens)
+    return {"ws_bytes": ws, "ws_ocs_bytes": ocs,
+            "reduction": 1 - ocs / ws, "paper": 0.516}
+
+
+def fig8b_update_reduction(tokens: int = 1024) -> Dict[str, float]:
+    os_upd = prefill_update_bytes(Dataflow.WS_OS, tokens)
+    ocs = prefill_update_bytes(Dataflow.WS_OCS, tokens)
+    return {"ws_os_updates": os_upd, "ws_ocs_updates": ocs,
+            "reduction": 1 - ocs / os_upd, "paper": 0.876}
+
+
+def fig9a_prefill_reduction(tokens: int = 1024) -> Dict[str, float]:
+    base = prefill_latency(Dataflow.WS_OS, tokens, rcw=False)
+    ocs = prefill_latency(Dataflow.WS_OCS, tokens, rcw=True)
+    return {"baseline_s": base, "ws_ocs_s": ocs,
+            "reduction": 1 - ocs / base, "paper": 0.4976,
+            "per_token_ms": ocs / tokens * 1e3, "paper_per_token_ms": 4.2}
+
+
+def fig9b_decode_reductions(ctx: int = 1024) -> Dict[str, float]:
+    base = decode_latency(rcw=False, fusion=False, ctx=ctx)
+    with_rcw = decode_latency(rcw=True, fusion=False, ctx=ctx)
+    final = decode_latency(rcw=True, fusion=True, ctx=ctx)
+    return {
+        "baseline_ms": base * 1e3,
+        "rcw_ms": with_rcw * 1e3,
+        "final_ms": final * 1e3,
+        "rcw_reduction": 1 - with_rcw / base, "paper_rcw": 0.2159,
+        "fusion_reduction": 1 - final / with_rcw, "paper_fusion": 0.6917,
+        "total_reduction": 1 - final / base, "paper_total": 0.7583,
+        "tokens_per_s": 1 / final, "paper_tokens_per_s": 26.87,
+    }
+
+
+def table2_summary() -> Dict[str, float]:
+    chip = RCWCIM
+    final = decode_latency(rcw=True, fusion=True)
+    power_w = chip.peak_tops / chip.tops_per_watt
+    return {
+        "throughput_tops": chip.peak_tops,
+        "paper_tops": 3.28,
+        "energy_eff_tops_per_w": chip.tops_per_watt,
+        "paper_tops_per_w": 42.3,
+        "power_w": power_w,
+        "prefill_per_token_ms": prefill_per_token_ms(),
+        "paper_prefill_ms": 4.2,
+        "decode_tokens_per_s": 1 / final,
+        "paper_decode_tokens_per_s": 26.87,
+        "energy_per_token_mj": power_w * final * 1e3,
+    }

@@ -1,0 +1,93 @@
+"""AdamW + LR schedules, implemented directly on pytrees (no optax here —
+the substrate is part of the deliverable).
+
+Optimizer-state dtype is configurable: fp32 default; bf16 for the
+480B-class config where fp32 m/v would not fit the pod (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    state_dtype: jnp.dtype = jnp.float32
+
+
+def lr_at(step: jax.Array, oc: OptConfig) -> jax.Array:
+    """Linear warmup → cosine decay to min_lr_ratio·lr."""
+    step = step.astype(jnp.float32)
+    warm = oc.lr * step / max(oc.warmup_steps, 1)
+    prog = jnp.clip((step - oc.warmup_steps)
+                    / max(oc.total_steps - oc.warmup_steps, 1), 0.0, 1.0)
+    cos = oc.lr * (oc.min_lr_ratio + (1 - oc.min_lr_ratio)
+                   * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < oc.warmup_steps, warm, cos)
+
+
+def init_opt_state(params, oc: OptConfig) -> Dict:
+    zeros = lambda p: jnp.zeros(p.shape, oc.state_dtype)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def adamw_update(params, grads, opt_state: Dict,
+                 oc: OptConfig) -> Tuple[Dict, Dict, Dict]:
+    """One AdamW step. Returns (params, opt_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, oc.grad_clip)
+    step = opt_state["step"] + 1
+    lr = lr_at(step, oc)
+    b1, b2 = oc.b1, oc.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def new_m_fn(g, m):
+        return (b1 * m.astype(jnp.float32)
+                + (1 - b1) * g.astype(jnp.float32)).astype(oc.state_dtype)
+
+    def new_v_fn(g, v):
+        return (b2 * v.astype(jnp.float32)
+                + (1 - b2) * jnp.square(g.astype(jnp.float32))) \
+            .astype(oc.state_dtype)
+
+    def new_p_fn(p, m2, v2):
+        mhat = m2.astype(jnp.float32) / bc1
+        vhat = v2.astype(jnp.float32) / bc2
+        delta = mhat / (jnp.sqrt(vhat) + oc.eps) + oc.weight_decay \
+            * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_m = jax.tree.map(new_m_fn, grads, opt_state["m"])
+    new_v = jax.tree.map(new_v_fn, grads, opt_state["v"])
+    new_params = jax.tree.map(new_p_fn, params, new_m, new_v)
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, metrics

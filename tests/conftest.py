@@ -1,0 +1,10 @@
+"""Test fixtures. NOTE: no XLA_FLAGS here by design — smoke tests and
+benches must see 1 device; only launch/dryrun.py sets the 512-device
+placeholder count (task spec)."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,87 @@
+"""Roofline-analysis math, optimization flags, HLO collective parser,
+pipeline bubble model, dataflow comparison helpers."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.dataflow import Dataflow, TileConfig, reduction_vs
+from repro.launch.analysis import model_flops, model_params, roofline_terms
+from repro.launch.dryrun import parse_collectives
+from repro.parallel.flags import opt
+from repro.parallel.pipeline import bubble_fraction
+from repro.configs import SHAPES, get_config
+
+
+def test_flags_defaults_and_baseline(monkeypatch):
+    monkeypatch.delenv("REPRO_BASELINE", raising=False)
+    monkeypatch.delenv("REPRO_OPT_FLASH", raising=False)
+    assert opt("FLASH") is True
+    monkeypatch.setenv("REPRO_OPT_FLASH", "0")
+    assert opt("FLASH") is False
+    monkeypatch.setenv("REPRO_OPT_FLASH", "1")
+    assert opt("FLASH") is True
+    monkeypatch.setenv("REPRO_BASELINE", "1")
+    assert opt("FLASH") is False          # baseline overrides everything
+
+
+def test_parse_collectives_ring_model():
+    hlo = """
+  %ar = bf16[1024,512]{1,0} all-reduce(bf16[1024,512] %x), replica_groups=[16,16]<=[256], to_apply=%add
+  %ag = f32[64,128]{1,0} all-gather(f32[4,128] %y), replica_groups={{0,1,2,3}}, dimensions={0}
+  %cp = bf16[8,8]{1,0} collective-permute(bf16[8,8] %z), source_target_pairs={{0,1}}
+"""
+    out = parse_collectives(hlo, 256)
+    B_ar = 1024 * 512 * 2
+    assert out["all-reduce"]["count"] == 1
+    np.testing.assert_allclose(out["all-reduce"]["wire_bytes"],
+                               2 * B_ar * 15 / 16)
+    B_ag = 64 * 128 * 4
+    np.testing.assert_allclose(out["all-gather"]["wire_bytes"],
+                               B_ag * 3 / 4)
+    assert out["collective-permute"]["wire_bytes"] == 8 * 8 * 2
+
+
+def test_model_params_moe_active_fraction():
+    cfg = get_config("arctic-480b", smoke=True)
+    p = model_params(cfg)
+    assert p["active"] < p["total"]
+    # experts are top-2 of 8 in the smoke config: active expert share = 1/4
+    assert p["active"] / p["total"] > 0.2
+
+
+def test_model_flops_kinds():
+    cfg = get_config("llama2-7b", smoke=True)
+    t = model_flops(cfg, SHAPES["train_4k"], 256)
+    pfl = model_flops(cfg, SHAPES["prefill_32k"], 256)
+    d = model_flops(cfg, SHAPES["decode_32k"], 256)
+    assert t == 3 * model_params(cfg)["active"] * 2 * 256 * 4096
+    assert d == 2 * model_params(cfg)["active"] * 128
+    assert pfl > d
+
+
+def test_roofline_terms_dominant():
+    rec = {
+        "status": "ok", "arch": "llama2-7b", "shape": "decode_32k",
+        "n_devices": 256,
+        "analysis": {"flops_per_device": 197e12, "bytes_per_device": 819e9,
+                     "wire_bytes_per_device": 100e9},
+        "memory_analysis": {},
+    }
+    t = roofline_terms(rec)
+    assert abs(t["compute_s"] - 1.0) < 1e-9
+    assert abs(t["memory_s"] - 1.0) < 1e-9
+    assert abs(t["collective_s"] - 2.0) < 1e-9
+    assert t["dominant"] == "collective"
+
+
+def test_bubble_fraction():
+    assert bubble_fraction(1, 4) == pytest.approx(3 / 4)
+    assert bubble_fraction(15, 4) == pytest.approx(3 / 18)
+    assert bubble_fraction(100, 1) == 0.0
+
+
+def test_reduction_vs_matches_paper_direction():
+    tc = TileConfig(M=1024, N=4096, K=4096, m=128, n=256, k=256)
+    r = reduction_vs(Dataflow.WS_OCS, Dataflow.WS, tc)
+    assert 0.3 < r < 0.7      # the Fig-8a regime

@@ -1,0 +1,70 @@
+"""Flash-attention kernel vs the exact oracle: causal, windowed (local),
+GQA head sharing, cross-attention, LUT-exp mode, dtype sweep."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+
+
+def _qkv(rng, B, H, Hkv, Sq, Sk, D, dtype=np.float32):
+    q = rng.standard_normal((B, H, Sq, D)).astype(dtype)
+    k = rng.standard_normal((B, Hkv, Sk, D)).astype(dtype)
+    v = rng.standard_normal((B, Hkv, Sk, D)).astype(dtype)
+    return jnp.asarray(q), jnp.asarray(k), jnp.asarray(v)
+
+
+@pytest.mark.parametrize("B,H,Hkv,S,D", [
+    (1, 2, 2, 64, 32), (2, 4, 2, 128, 64), (1, 8, 1, 64, 32),
+    (2, 6, 2, 96, 32),
+])
+def test_causal_flash_vs_ref(rng, B, H, Hkv, S, D):
+    q, k, v = _qkv(rng, B, H, Hkv, S, S, D)
+    got = flash_attention(q, k, v, causal=True, block_q=32, block_k=32,
+                          interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("window", [16, 48, 200])
+def test_local_window_flash(rng, window):
+    q, k, v = _qkv(rng, 2, 4, 2, 128, 128, 32)
+    got = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=32, block_k=32, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_cross_attention_flash(rng):
+    q, k, v = _qkv(rng, 2, 4, 4, 32, 96, 32)
+    got = flash_attention(q, k, v, causal=False, block_q=16, block_k=32,
+                          interpret=True)
+    want = ref.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_lut_mode_close_to_exact(rng):
+    q, k, v = _qkv(rng, 1, 2, 2, 64, 64, 32)
+    got = flash_attention(q, k, v, causal=True, use_lut=True,
+                          block_q=32, block_k=32, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    assert float(jnp.abs(got - want).max()) < 2e-2
+
+
+def test_bf16_inputs(rng):
+    q, k, v = _qkv(rng, 1, 2, 2, 64, 64, 32)
+    got = flash_attention(q.astype(jnp.bfloat16), k.astype(jnp.bfloat16),
+                          v.astype(jnp.bfloat16), causal=True,
+                          block_q=32, block_k=32, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    assert float(jnp.abs(got.astype(jnp.float32) - want).max()) < 5e-2
+
+
+def test_block_size_invariance(rng):
+    q, k, v = _qkv(rng, 1, 2, 1, 128, 128, 32)
+    a = flash_attention(q, k, v, causal=True, block_q=32, block_k=64,
+                        interpret=True)
+    b = flash_attention(q, k, v, causal=True, block_q=64, block_k=16,
+                        interpret=True)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,89 @@
+"""Group-softmax / group-RMSNorm / group-LayerNorm kernels vs oracles,
+plus the LUT approximation error bounds the paper's accuracy story
+depends on."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fusion
+from repro.kernels import ref
+from repro.kernels.group_rmsnorm import group_layernorm, group_rmsnorm
+from repro.kernels.group_softmax import group_softmax
+
+
+@pytest.mark.parametrize("rows,s,g", [(8, 128, 64), (16, 256, 64),
+                                      (8, 512, 128), (32, 64, 32)])
+def test_group_softmax_kernel_vs_ref(rng, rows, s, g):
+    x = jnp.asarray(rng.standard_normal((rows, s)).astype(np.float32) * 4)
+    got = group_softmax(x, g, block_rows=8, interpret=True)
+    want = ref.group_softmax_ref(x, g, use_lut=True)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-6)
+
+
+def test_group_softmax_lut_close_to_exact(rng):
+    x = jnp.asarray(rng.standard_normal((64, 256)).astype(np.float32) * 5)
+    lut = np.asarray(fusion.group_softmax(x, 64, use_lut=True))
+    exact = np.asarray(jax.nn.softmax(x, axis=-1))
+    # chord error of exp on a 0.25-wide segment ≈ w²/8 ≈ 0.8% relative;
+    # propagated through the softmax ratio this bounds abs error ≈ 4e-3
+    assert np.abs(lut - exact).max() < 4e-3
+    np.testing.assert_allclose(lut.sum(-1), 1.0, atol=1e-5)
+
+
+def test_group_softmax_matches_exact_when_no_lut(rng):
+    x = jnp.asarray(rng.standard_normal((8, 200)).astype(np.float32) * 3)
+    got = fusion.group_softmax(x, 64, use_lut=False)   # padded path too
+    want = jax.nn.softmax(x, axis=-1)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_lut_exp_error_bound():
+    x = jnp.linspace(-16.0, 0.0, 10_001)
+    err = jnp.abs(fusion.lut_exp(x) - jnp.exp(x))
+    # chord error bound: max |exp - chord| ≤ e^(seg hi)·w²/8 with
+    # w = 16/64 = 0.25 → 7.8e-3 on the last segment
+    assert float(err.max()) < 8e-3
+    # relative error away from the clamp region stays ~sub-percent
+    rel = err / jnp.exp(x)
+    assert float(rel[x > -10].max()) < 8e-3
+    # underflow guard: exact zero below range
+    assert float(fusion.lut_exp(jnp.array([-1e9, -17.0])).max()) == 0.0
+
+
+@pytest.mark.parametrize("rows,n,g", [(8, 256, 64), (16, 128, 128),
+                                      (8, 512, 256)])
+def test_group_rmsnorm_kernel_vs_ref(rng, rows, n, g):
+    x = jnp.asarray(rng.standard_normal((rows, n)).astype(np.float32))
+    gamma = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    got = group_rmsnorm(x, gamma, g, interpret=True)
+    want = ref.group_rmsnorm_ref(x, gamma, g)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_group_rmsnorm_equals_global_rmsnorm(rng):
+    """eq (2) + late sync is numerically the standard global RMSNorm."""
+    x = jnp.asarray(rng.standard_normal((4, 256)).astype(np.float32))
+    g = jnp.ones(256)
+    got = fusion.group_rmsnorm(x, g, group_size=64)
+    inv = jax.lax.rsqrt(jnp.mean(x * x, -1, keepdims=True) + 1e-6)
+    np.testing.assert_allclose(got, x * inv, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("rows,n,g", [(8, 256, 64), (16, 128, 128)])
+def test_group_layernorm_kernel_vs_ref(rng, rows, n, g):
+    x = jnp.asarray(rng.standard_normal((rows, n)).astype(np.float32))
+    gamma = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    beta = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    got = group_layernorm(x, gamma, beta, g, interpret=True)
+    want = ref.group_layernorm_ref(x, gamma, beta, g)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_online_softmax_attention_matches_exact(rng):
+    q = jnp.asarray(rng.standard_normal((2, 2, 32, 16)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((2, 2, 32, 16)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((2, 2, 32, 16)).astype(np.float32))
+    got = fusion.online_softmax_attention(q, k, v, causal=True, block_k=8)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)

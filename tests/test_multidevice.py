@@ -1,0 +1,108 @@
+"""Multi-device distribution features that need >1 device: run in
+subprocesses with XLA_FLAGS host placeholder devices (the main test
+process must keep seeing 1 device per the task spec)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+
+def _run(src: str, devices: int = 8, timeout=600):
+    prog = (f"import os\n"
+            f"os.environ['XLA_FLAGS'] = "
+            f"'--xla_force_host_platform_device_count={devices}'\n"
+            + textwrap.dedent(src))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                          text=True, timeout=timeout, env=env)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return proc.stdout
+
+
+def test_gpipe_pipeline_matches_sequential():
+    out = _run("""
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.parallel.pipeline import pipeline_apply
+
+    S, B, D = 4, 16, 32
+    mesh = jax.make_mesh((S,), ("stage",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.default_rng(0)
+    ws = jnp.asarray(rng.standard_normal((S, D, D)).astype(np.float32) * 0.3)
+    bs = jnp.asarray(rng.standard_normal((S, D)).astype(np.float32) * 0.1)
+    x = jnp.asarray(rng.standard_normal((B, D)).astype(np.float32))
+
+    def stage(params, h):
+        w, b = params
+        return jnp.tanh(h @ w + b)
+
+    with jax.set_mesh(mesh):
+        y = pipeline_apply(mesh, stage, (ws, bs), x, n_micro=4)
+
+    ref = x
+    for i in range(S):
+        ref = jnp.tanh(ref @ ws[i] + bs[i])
+    err = float(jnp.abs(y - ref).max())
+    assert err < 1e-5, err
+    print("gpipe ok", err)
+    """)
+    assert "gpipe ok" in out
+
+
+def test_compressed_pod_psum_error_bound():
+    out = _run("""
+    import jax, jax.numpy as jnp, numpy as np
+    from functools import partial
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.parallel.compress import compressed_psum
+
+    mesh = jax.make_mesh((4, 2), ("pod", "data"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal((4, 256)).astype(np.float32))
+
+    @partial(shard_map, mesh=mesh, in_specs=(P("pod"),),
+             out_specs=P("pod"), check_rep=False)
+    def f(x):
+        return compressed_psum(x, "pod")
+
+    with jax.set_mesh(mesh):
+        got = f(g)
+    # every pod shard now holds the sum over the pod axis
+    want = jnp.broadcast_to(g.sum(0, keepdims=True), g.shape)
+    rel = float(jnp.abs(got - want).max() / jnp.abs(want).max())
+    assert rel < 2e-2, rel   # int8 chunk-scaled error bound
+    print("compressed psum ok", rel)
+    """)
+    assert "compressed psum ok" in out
+
+
+def test_sharded_train_step_multidevice():
+    """The jitted sharded train step runs (not just compiles) on an 8-dev
+    (4 data × 2 model) host mesh with FSDP+TP rules."""
+    out = _run("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_config
+    from repro.data.pipeline import DataConfig
+    from repro.launch.mesh import make_host_mesh
+    from repro.train.trainer import TrainConfig, Trainer
+    from repro.train.optimizer import OptConfig
+
+    cfg = get_config("llama2-7b", smoke=True).replace(dtype=jnp.float32)
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    dc = DataConfig(seed=0, batch_size=8, seq_len=32,
+                    vocab_size=cfg.vocab_size)
+    tr = Trainer(cfg, mesh, dc, TrainConfig(total_steps=6),
+                 OptConfig(lr=1e-3))
+    losses = []
+    tr.run(on_metrics=lambda s, m: losses.append(m["loss"]))
+    print("multidev train ok")
+    """)
+    assert "multidev train ok" in out

@@ -1,0 +1,58 @@
+"""The analytical chip model must reproduce the paper's headline numbers
+(Table II, Fig 8, Fig 9) within the documented residuals."""
+import pytest
+
+from repro.sim import perf_model as pm
+from repro.sim.chip import RCWCIM
+
+
+def test_peak_tops_matches_table2():
+    assert abs(RCWCIM.peak_tops - 3.28) < 0.01
+
+
+def test_fig8a_dram_reduction():
+    r = pm.fig8a_dram_reduction()
+    assert abs(r["reduction"] - 0.516) < 0.02          # fitted tiles: 50.4%
+
+
+def test_fig8b_update_reduction():
+    r = pm.fig8b_update_reduction()
+    assert abs(r["reduction"] - 0.876) < 0.005
+
+
+def test_fig9a_prefill():
+    r = pm.fig9a_prefill_reduction()
+    assert abs(r["reduction"] - 0.4976) < 0.005
+    assert abs(r["per_token_ms"] - 4.2) < 0.05
+
+
+def test_fig9b_decode_chain():
+    r = pm.fig9b_decode_reductions()
+    assert abs(r["rcw_reduction"] - 0.2159) < 0.012    # −0.8pp residual
+    assert abs(r["fusion_reduction"] - 0.6917) < 0.005
+    assert abs(r["total_reduction"] - 0.7583) < 0.005
+    assert abs(r["tokens_per_s"] - 26.87) < 0.05
+
+
+def test_table2_summary():
+    t = pm.table2_summary()
+    assert abs(t["prefill_per_token_ms"] - 4.2) < 0.05
+    assert abs(t["decode_tokens_per_s"] - 26.87) < 0.05
+
+
+def test_decode_monotonicity():
+    """Each mechanism must strictly help, at any context length."""
+    for ctx in (256, 1024, 4096):
+        base = pm.decode_latency(rcw=False, fusion=False, ctx=ctx)
+        rcw = pm.decode_latency(rcw=True, fusion=False, ctx=ctx)
+        both = pm.decode_latency(rcw=True, fusion=True, ctx=ctx)
+        assert both < rcw < base
+
+
+def test_prefill_dataflow_ordering():
+    from repro.core.dataflow import Dataflow
+    ocs = pm.prefill_latency(Dataflow.WS_OCS, rcw=True)
+    ws_os = pm.prefill_latency(Dataflow.WS_OS, rcw=False)
+    is_os = pm.prefill_latency(Dataflow.IS_OS, rcw=False)
+    assert ocs < ws_os
+    assert ocs < is_os

@@ -1,0 +1,162 @@
+"""Trainer + serving integration: loss decreases, checkpoint/restart
+resumes bit-exactly, rollback-on-failure works, the serving engine
+generates with both bf16 and W4A8 (WS-OCS kernel path) weights."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.launch.mesh import make_host_mesh
+from repro.models import api
+from repro.serve.engine import Engine, ServeConfig, quantize_params
+from repro.train.optimizer import OptConfig
+from repro.train.trainer import TrainConfig, Trainer
+
+
+def _tiny_cfg():
+    return get_config("llama2-7b", smoke=True).replace(dtype=jnp.float32)
+
+
+def _mk_trainer(tmp_path=None, steps=60, accum=1):
+    cfg = _tiny_cfg()
+    mesh = make_host_mesh()
+    dc = DataConfig(seed=7, batch_size=4, seq_len=32,
+                    vocab_size=cfg.vocab_size)
+    tc = TrainConfig(total_steps=steps, log_every=10, ckpt_every=20,
+                     ckpt_dir=str(tmp_path) if tmp_path else None,
+                     grad_accum=accum)
+    oc = OptConfig(lr=3e-3, warmup_steps=10, total_steps=steps)
+    return Trainer(cfg, mesh, dc, tc, oc)
+
+
+def test_loss_decreases():
+    tr = _mk_trainer(steps=150)
+    losses = []
+    tr.run(on_metrics=lambda s, m: losses.append(m["loss"]))
+    assert len(losses) >= 10
+    # clear downward trend (the synthetic stream has a high entropy
+    # floor, so require a robust absolute drop rather than a ratio)
+    assert min(losses[-3:]) < losses[0] - 0.4, losses
+
+
+def test_checkpoint_restart_bit_exact(tmp_path):
+    tr1 = _mk_trainer(tmp_path / "ck", steps=40)
+    tr1.run()                              # ckpts at 20, 40
+    p40 = jax.device_get(tr1.params)
+
+    # fresh trainer resumes from step 40 checkpoint and matches a
+    # continuous run step-for-step (step-keyed data stream)
+    tr2 = _mk_trainer(tmp_path / "ck", steps=40)
+    assert tr2.step == 40
+    tr1.run(steps=10)
+    tr2.run(steps=10)
+    a = jax.tree.leaves(jax.device_get(tr1.params))
+    b = jax.tree.leaves(jax.device_get(tr2.params))
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    del p40
+
+
+def test_rollback_on_persistent_failure(tmp_path):
+    tr = _mk_trainer(tmp_path / "ck", steps=20)
+    tr.run()                               # ckpt at 20
+    step_before = tr.step
+    # inject a persistently failing step fn; trainer must roll back to
+    # the checkpoint instead of crashing
+    calls = {"n": 0}
+    orig = tr._step_fn
+
+    def flaky(params, opt, batch):
+        calls["n"] += 1
+        if calls["n"] <= 3:
+            raise RuntimeError("simulated device failure")
+        return orig(params, opt, batch)
+
+    tr._step_fn = flaky
+    tr.run(steps=2)
+    assert tr.step == step_before + 2
+    assert calls["n"] > 3
+
+
+def test_grad_accum_matches_large_batch():
+    """accum=2 over batch 8 ≈ accum=1 over the same batch (same tokens)."""
+    cfg = _tiny_cfg()
+    mesh = make_host_mesh()
+    dc = DataConfig(seed=3, batch_size=8, seq_len=16,
+                    vocab_size=cfg.vocab_size)
+    oc = OptConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    t1 = Trainer(cfg, mesh, dc, TrainConfig(total_steps=1, grad_accum=1), oc)
+    t2 = Trainer(cfg, mesh, dc, TrainConfig(total_steps=1, grad_accum=2), oc)
+    t1.run(steps=1)
+    t2.run(steps=1)
+    a = jax.tree.leaves(jax.device_get(t1.params))
+    b = jax.tree.leaves(jax.device_get(t2.params))
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(x, y, rtol=2e-4, atol=2e-5)
+
+
+def test_elastic_restore_different_mesh(tmp_path):
+    """Checkpoint saved under one mesh restores onto another (elastic)."""
+    tr = _mk_trainer(tmp_path / "ck", steps=20)
+    tr.run()
+    cfg = _tiny_cfg()
+    mesh2 = make_host_mesh(model=1, data=1)
+    dc = DataConfig(seed=7, batch_size=4, seq_len=32,
+                    vocab_size=cfg.vocab_size)
+    tc = TrainConfig(total_steps=20, ckpt_dir=str(tmp_path / "ck"))
+    tr2 = Trainer(cfg, mesh2, dc, tc, OptConfig(lr=3e-3))
+    assert tr2.step == 20
+    a = jax.tree.leaves(jax.device_get(tr.params))
+    b = jax.tree.leaves(jax.device_get(tr2.params))
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def test_engine_generates():
+    cfg = _tiny_cfg()
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, max_len=64)
+    toks = np.arange(12, dtype=np.int32).reshape(2, 6) % cfg.vocab_size
+    out = eng.generate(toks, ServeConfig(max_new_tokens=8))
+    assert out.shape == (2, 14)
+    assert np.all(out[:, :6] == toks)
+
+
+def test_quantized_serving_close_to_fp():
+    """W4A8 WS-OCS serving path tracks the fp32 model (greedy tokens may
+    differ on an untrained model; logits must stay close)."""
+    cfg = _tiny_cfg()
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    qcfg = cfg.replace(quant_mode="w4a8", use_lut_softmax=True)
+    qparams = quantize_params(params, qcfg)
+
+    toks = jnp.arange(8, dtype=jnp.int32).reshape(1, 8) % cfg.vocab_size
+    batch = {"tokens": toks}
+    cache_f = api.init_cache(cfg, 1, 16)
+    cache_q = api.init_cache(qcfg, 1, 16)
+    lf, _ = api.prefill_step(params, cfg, batch, cache_f)
+    lq, _ = api.prefill_step(qparams, qcfg, batch, cache_q)
+    # every linear layer carries INT4 grouped-quant noise (random-init
+    # weights are the worst case); the model-level check is that the
+    # quantized logits track the fp logits strongly
+    a = np.asarray(lf).ravel()
+    b = np.asarray(lq).ravel()
+    corr = float(np.corrcoef(a, b)[0, 1])
+    assert corr > 0.95, corr
+    rel = float(jnp.abs(lf - lq).max() / (jnp.abs(lf).max() + 1e-9))
+    assert rel < 0.5, rel
+
+
+def test_quantized_engine_end_to_end():
+    cfg = _tiny_cfg().replace(quant_mode="w4a8", use_lut_softmax=True)
+    params = quantize_params(api.init(jax.random.PRNGKey(0), cfg), cfg)
+    eng = Engine(cfg, params, max_len=32)
+    toks = np.arange(8, dtype=np.int32).reshape(2, 4) % cfg.vocab_size
+    out = eng.generate(toks, ServeConfig(max_new_tokens=4))
+    assert out.shape == (2, 8)
