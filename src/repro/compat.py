@@ -1,0 +1,94 @@
+"""jax version-compatibility shims (DESIGN.md §6).
+
+The repo targets the current jax API surface; the pinned container runs
+jax 0.4.37, which predates a few names the code uses. Policy (§6): all
+version-sensitive jax APIs are accessed through this module (and
+``repro.kernels.pallas_compat`` for Pallas-TPU names) — never through
+``jax.*`` directly — so a jax upgrade is a one-file change and the repo
+runs unmodified on both sides of each rename.
+
+Covered here:
+
+* ``jax.sharding.AxisType``            (added after 0.4.37)
+* ``jax.make_mesh(..., axis_types=)``  (kwarg added after 0.4.37)
+* ``jax.sharding.get_abstract_mesh``   (added after 0.4.37; the fallback
+  reads the ambient physical mesh that ``with mesh:`` installs)
+* ``jax.set_mesh``                     (added after 0.4.37; the fallback
+  uses the Mesh object itself as the context manager)
+"""
+from __future__ import annotations
+
+import enum
+
+import jax
+
+__all__ = ["AxisType", "make_mesh", "get_abstract_mesh", "set_mesh",
+           "tree_flatten_with_path", "abstract_mesh", "cost_analysis"]
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` returns a per-program *list* of dicts
+    on 0.4.37 and a flat dict on current jax; normalize to the dict."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
+def abstract_mesh(axis_shapes, axis_names):
+    """``jax.sharding.AbstractMesh`` across the signature change:
+    current jax takes ``(axis_sizes, axis_names)``, 0.4.37 takes a single
+    ``((name, size), ...)`` tuple."""
+    try:
+        return jax.sharding.AbstractMesh(tuple(axis_shapes),
+                                         tuple(axis_names))
+    except TypeError:
+        return jax.sharding.AbstractMesh(
+            tuple(zip(axis_names, axis_shapes)))
+
+
+def tree_flatten_with_path(tree):
+    """``jax.tree.flatten_with_path`` (added after 0.4.37); falls back to
+    the long-stable ``jax.tree_util`` spelling."""
+    if hasattr(jax.tree, "flatten_with_path"):
+        return jax.tree.flatten_with_path(tree)
+    return jax.tree_util.tree_flatten_with_path(tree)
+
+
+if hasattr(jax.sharding, "AxisType"):
+    AxisType = jax.sharding.AxisType
+else:
+    class AxisType(enum.Enum):
+        """Stand-in for jax.sharding.AxisType (all axes behave as Auto
+        on 0.4.37, which is the only mode this repo uses)."""
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """``jax.make_mesh`` accepting ``axis_types`` on every jax version
+    (silently dropped pre-0.4.38, where Auto was the only behavior)."""
+    try:
+        return jax.make_mesh(axis_shapes, axis_names,
+                             axis_types=axis_types, devices=devices)
+    except TypeError:
+        return jax.make_mesh(axis_shapes, axis_names, devices=devices)
+
+
+def get_abstract_mesh():
+    """The ambient mesh, or None when outside any mesh context. Callers
+    treat None and an empty mesh identically (no-op constraints)."""
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return jax.sharding.get_abstract_mesh()
+    from jax.interpreters import pxla
+    m = pxla.thread_resources.env.physical_mesh
+    return None if m.empty else m
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh. On
+    0.4.37 the Mesh object itself is the context manager."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh

@@ -60,6 +60,9 @@ class ModelConfig:
     norm_group: int = 128
     use_lut_softmax: bool = False
     use_fusion: bool = True           # group-norm/softmax fused ops on/off
+    fuse_epilogue: bool = False       # fused-epilogue decode chain (§7):
+                                      # norm→GEMM→act/GLU→residual in one
+                                      # kernel dispatch per linear
     dataflow: str = "ws_ocs"          # kernel/scheduler dataflow selection
     rcw: bool = True                  # weight-stream overlap on/off
     # --- numerics / compile ---

@@ -1,0 +1,151 @@
+"""Single-dispatch fused attention decode kernel (DESIGN.md §7).
+
+The unfused decode path issues three dispatches per layer — QK^T einsum,
+group-softmax (paper eq 1), PV einsum — bouncing an fp32 (B, H, S) logits
+tensor and an equally large probs tensor through HBM. This kernel folds
+all three: scores, the LUT-exp group-softmax partial accumulation, and
+the PV accumulation happen on the same VMEM-resident KV tiles, and only
+the (G, D) output leaves the kernel.
+
+Group-softmax algebra (not plain online softmax): the paper normalizes
+with per-*group* maxima merged late, and with the piecewise-linear LUT
+exp the usual flash-style running rescale (``lut(a)·lut(b) ≠ lut(a+b)``)
+would drift from the unfused reference. The kernel therefore runs two
+sweeps over the KV blocks of each (batch, kv-head):
+
+  phase 0   scores only → the exact global max of the group maxima
+  phase 1   per-group max → LUT-exp → per-group sums, each group scaled
+            by ``exp(m_g − m_global)`` exactly as eq (1) prescribes, and
+            the PV partial products accumulated in VMEM scratch
+
+so the result matches ``ref.attention_decode_ref`` (einsum →
+group_softmax → einsum) to fp32 round-off in both LUT and exact-exp
+modes. KV is read twice — the split-K trade every flash-decoding kernel
+makes — while the O(S) logits/probs HBM round-trips disappear.
+
+Layouts: q (B, Hkv, G, D) grouped queries; k/v stay in the cache layout
+(B, S, Hkv, D) — the BlockSpec index map does the GQA head sharing and
+the (b, s, h, d) → tile mapping, so no transpose/copy is dispatched.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.fusion import LUT_HI, LUT_LO, LUT_SEGMENTS, build_exp_lut
+from repro.kernels import pallas_compat as pltpu
+from repro.kernels.group_softmax import _lut_exp_block
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, len_ref, ab_ref, o_ref,
+            mrun_ref, den_ref, acc_ref, *,
+            scale, group, use_lut, window, bs, gq):
+    ph, ki = pl.program_id(1), pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when((ph == 0) & (ki == 0))
+    def _():
+        mrun_ref[...] = jnp.full_like(mrun_ref, _NEG)
+        den_ref[...] = jnp.zeros_like(den_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[0, 0]
+    q = q_ref[0, 0].astype(jnp.float32)                     # (G, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)               # (bs, D)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    kpos = ki * bs + jax.lax.broadcasted_iota(jnp.int32, (gq, bs), 1)
+    mask = kpos < length
+    if window is not None:
+        mask = jnp.logical_and(mask, kpos > length - 1 - window)
+    s = jnp.where(mask, s, _NEG)
+    nb = bs // group
+    sg = s.reshape(gq, nb, group)
+    m_g = jnp.max(sg, axis=-1)                              # (G, nb)
+
+    @pl.when(ph == 0)
+    def _():
+        m_blk = jnp.max(m_g, axis=-1, keepdims=True)        # (G, 1)
+        mrun_ref[...] = jnp.maximum(mrun_ref[...],
+                                    jnp.broadcast_to(m_blk, mrun_ref.shape))
+
+    @pl.when(ph == 1)
+    def _():
+        m = mrun_ref[:, :1]                                 # exact global max
+        if use_lut:
+            p = _lut_exp_block(sg - m_g[..., None], ab_ref, LUT_LO, LUT_HI)
+            r = _lut_exp_block(m_g - m, ab_ref, LUT_LO, LUT_HI)
+        else:
+            p = jnp.exp(sg - m_g[..., None])
+            r = jnp.exp(m_g - m)
+        s_g = jnp.sum(p, axis=-1)                           # (G, nb)
+        den = jnp.sum(s_g * r, axis=-1, keepdims=True)
+        den_ref[...] = den_ref[...] + jnp.broadcast_to(den, den_ref.shape)
+        pr = (p * r[..., None]).reshape(gq, bs)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)           # (bs, D)
+        acc_ref[...] = acc_ref[...] + jnp.dot(
+            pr, v, preferred_element_type=jnp.float32)
+
+    @pl.when((ph == 1) & (ki == nk - 1))
+    def _():
+        den = jnp.maximum(den_ref[:, :1], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / den).astype(o_ref.dtype)
+
+
+def attention_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                     lengths: jax.Array, *, group_size: int = 64,
+                     use_lut: bool = True, scale: Optional[float] = None,
+                     window: Optional[int] = None, block_k: int = 128,
+                     interpret: bool = False) -> jax.Array:
+    """q (B, H, D) single decode query; k/v (B, S, Hkv, D) cache layout;
+    lengths (B,) or (B, 1) int32 valid prefix lengths. Returns (B, H, D).
+    S must be divisible by the KV block, the block by ``group_size``."""
+    B, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    g = min(group_size, S)
+    assert S % g == 0, (S, g)
+    bs = max(min(block_k, S) // g * g, g)     # block = whole #groups...
+    while S % bs:
+        bs -= g                               # ...and a divisor of S
+    assert S % bs == 0 and bs % g == 0, (S, bs, g)
+    scale = scale if scale is not None else D ** -0.5
+
+    qg = q.reshape(B, Hkv, G, D)
+    len2 = lengths.reshape(B, 1).astype(jnp.int32)
+    a, b = build_exp_lut()
+    ab = jnp.stack([a, b], axis=1)
+
+    kern = functools.partial(_kernel, scale=scale, group=g, use_lut=use_lut,
+                             window=window, bs=bs, gq=G)
+    out = pl.pallas_call(
+        kern,
+        grid=(B * Hkv, 2, S // bs),           # (bh, phase, kv-block)
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D),
+                         lambda bh, ph, ki: (bh // Hkv, bh % Hkv, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda bh, ph, ki: (bh // Hkv, ki, bh % Hkv, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda bh, ph, ki: (bh // Hkv, ki, bh % Hkv, 0)),
+            pl.BlockSpec((1, 1), lambda bh, ph, ki: (bh // Hkv, 0)),
+            pl.BlockSpec((LUT_SEGMENTS, 2), lambda bh, ph, ki: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda bh, ph, ki: (bh // Hkv, bh % Hkv, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 128), jnp.float32),   # running max (lane-bcast)
+            pltpu.VMEM((G, 128), jnp.float32),   # denominator
+            pltpu.VMEM((G, D), jnp.float32),     # PV accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(qg, k, v, len2, ab)
+    return out.reshape(B, H, D)

@@ -15,7 +15,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels import pallas_compat as pltpu
 
 from repro.core.fusion import LUT_HI, LUT_LO, LUT_SEGMENTS, build_exp_lut
 from repro.kernels.group_softmax import _lut_exp_block

@@ -12,7 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels import pallas_compat as pltpu
 
 
 def _rms_kernel(x_ref, g_ref, o_ref, *, group_size, eps):

@@ -16,7 +16,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels import pallas_compat as pltpu
 
 
 def _combine(x, y):

@@ -15,6 +15,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import attention_decode as _ad
 from repro.kernels import flash_attention as _fa
 from repro.kernels import selective_scan as _ss
 from repro.kernels import group_rmsnorm as _gr
@@ -59,6 +60,46 @@ def ws_ocs_matmul(x, w_data, w_scale, *, bits=4, x_scale=None,
         return out
     return ref.ws_ocs_matmul_ref(x, w_data, w_scale, bits=bits,
                                  x_scale=x_scale)
+
+
+def _tile(dim: int, block: int) -> int:
+    """Largest tile ≤ block that divides dim (falls back to the whole
+    dim — fine for the serving/test sizes the fused path handles)."""
+    b = min(block, dim)
+    return b if dim % b == 0 else dim
+
+
+def fused_matmul(x, w_data, w_scale, *, bits=4, gamma=None, norm_group=128,
+                 norm_eps=1e-6, x_scale=None, act="none", w2_data=None,
+                 w2_scale=None, bias=None, residual=None, out_scale=None,
+                 bm=128, bk=128):
+    """Fused prologue/epilogue WS-OCS matmul (DESIGN.md §7): one dispatch
+    for group-RMSNorm → GEMM → act/GLU → bias → residual → requant."""
+    kw = dict(bits=bits, gamma=gamma, norm_group=norm_group,
+              norm_eps=norm_eps, x_scale=x_scale, act=act, w2_data=w2_data,
+              w2_scale=w2_scale, bias=bias, residual=residual,
+              out_scale=out_scale)
+    if _use_pallas():
+        M, K = x.shape[0], w_data.shape[1]
+        return _mm.fused_matmul(x, w_data, w_scale, bm=_tile(M, bm),
+                                bk=_tile(K, bk), interpret=_interpret(),
+                                **kw)
+    return ref.fused_matmul_ref(x, w_data, w_scale, **kw)
+
+
+def attention_decode(q, k, v, lengths, *, group_size=64, use_lut=True,
+                     scale=None, window=None, block_k=128):
+    """Single-dispatch fused decode attention (QK^T + group-softmax + PV
+    in one kernel); falls back to the three-dispatch ref composition."""
+    S = k.shape[1]
+    if _use_pallas() and S % min(group_size, S) == 0:
+        return _ad.attention_decode(q, k, v, lengths,
+                                    group_size=group_size, use_lut=use_lut,
+                                    scale=scale, window=window,
+                                    block_k=block_k, interpret=_interpret())
+    return ref.attention_decode_ref(q, k, v, lengths, group_size=group_size,
+                                    use_lut=use_lut, scale=scale,
+                                    window=window)
 
 
 def group_softmax(x, group_size=64, use_lut=True):

@@ -1,0 +1,24 @@
+"""Pallas-TPU name-compatibility shims (DESIGN.md §6).
+
+jax renamed ``pltpu.TPUCompilerParams`` → ``pltpu.CompilerParams`` and
+``pltpu.TPUMemorySpace`` → ``pltpu.MemorySpace`` after 0.4.37. Kernel
+modules import these names from here instead of from ``pltpu`` so they
+lower on both sides of the rename. The stable names (``VMEM``, ``SMEM``,
+``SemaphoreType``, ``make_async_copy``) are re-exported for uniformity —
+kernel code should not need a direct ``pltpu`` import for any of them.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+MemorySpace = getattr(pltpu, "MemorySpace", None) or pltpu.TPUMemorySpace
+
+VMEM = pltpu.VMEM
+SMEM = pltpu.SMEM
+SemaphoreType = pltpu.SemaphoreType
+make_async_copy = pltpu.make_async_copy
+
+__all__ = ["CompilerParams", "MemorySpace", "VMEM", "SMEM",
+           "SemaphoreType", "make_async_copy"]

@@ -40,6 +40,81 @@ def ws_ocs_matmul_ref(x: jax.Array, w_data: jax.Array, w_scale: jax.Array,
     return out.astype(out_dtype)
 
 
+def fused_matmul_ref(x: jax.Array, w_data: jax.Array, w_scale: jax.Array, *,
+                     bits: int = 4, gamma: Optional[jax.Array] = None,
+                     norm_group: int = 128, norm_eps: float = 1e-6,
+                     x_scale: Optional[jax.Array] = None, act: str = "none",
+                     w2_data: Optional[jax.Array] = None,
+                     w2_scale: Optional[jax.Array] = None,
+                     bias: Optional[jax.Array] = None,
+                     residual: Optional[jax.Array] = None,
+                     out_scale: Optional[jax.Array] = None) -> jax.Array:
+    """Unfused composition of the fused-epilogue WS-OCS kernel: the same
+    stages (group-RMSNorm prologue → GEMM → act/GLU → bias → residual →
+    int8 requant) as separate jnp ops, in the kernel's f32 algebra."""
+    xf = x.astype(jnp.float32)
+    if gamma is not None:
+        g = min(norm_group, xf.shape[-1])
+        xf = fusion.group_rmsnorm(xf, gamma.astype(jnp.float32),
+                                  group_size=g, eps=norm_eps)
+    acc = jnp.dot(xf, dequant_weight_ref(w_data, w_scale, bits),
+                  preferred_element_type=jnp.float32)
+    if x_scale is not None:
+        acc = acc * x_scale.astype(jnp.float32)
+    if act == "silu":
+        acted = jax.nn.silu(acc)
+    elif act == "gelu":
+        acted = jax.nn.gelu(acc)
+    elif act == "none":
+        acted = acc
+    else:  # fail on both backends alike (kernel asserts the same set)
+        raise ValueError(f"unknown epilogue act {act!r}")
+    if w2_data is not None:
+        acc2 = jnp.dot(xf, dequant_weight_ref(w2_data, w2_scale, bits),
+                       preferred_element_type=jnp.float32)
+        if x_scale is not None:
+            acc2 = acc2 * x_scale.astype(jnp.float32)
+        acted = acted * acc2
+    if bias is not None:
+        acted = acted + bias.astype(jnp.float32)
+    if residual is not None:
+        acted = acted + residual.astype(jnp.float32)
+    if out_scale is not None:
+        q = jnp.round(acted / out_scale.astype(jnp.float32))
+        return jnp.clip(q, -128, 127).astype(jnp.int8)
+    return acted
+
+
+def attention_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         lengths: jax.Array, *, group_size: int = 64,
+                         use_lut: bool = True,
+                         scale: Optional[float] = None,
+                         window: Optional[int] = None) -> jax.Array:
+    """Unfused three-dispatch decode composition: QK^T einsum →
+    group-softmax (eq 1) → PV einsum. q (B, H, D) single query; k/v
+    (B, S, Hkv, D) cache layout; lengths (B,) or (B, 1) valid prefix
+    lengths. Returns (B, H, D). This is the oracle the fused
+    single-dispatch kernel (attention_decode.py) must reproduce."""
+    B, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    s_ = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bshd->bhgs", qg, k.astype(jnp.float32),
+                        preferred_element_type=jnp.float32) * s_
+    ln = lengths.reshape(B)[:, None, None, None]
+    kpos = jnp.arange(S)[None, None, None, :]
+    m = kpos < ln
+    if window is not None:
+        m = m & (kpos > ln - 1 - window)
+    logits = jnp.where(m, logits, -1e30)
+    probs = fusion.group_softmax(logits, group_size=group_size,
+                                 use_lut=use_lut)
+    out = jnp.einsum("bhgs,bshd->bhgd", probs, v.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, H, D).astype(q.dtype)
+
+
 def group_softmax_ref(x: jax.Array, group_size: int = 64,
                       use_lut: bool = True) -> jax.Array:
     return fusion.group_softmax(x, group_size=group_size, use_lut=use_lut)

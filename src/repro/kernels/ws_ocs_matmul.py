@@ -33,7 +33,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels import pallas_compat as pltpu
 
 
 def _dequant_block(w_blk: jax.Array, scale_blk: jax.Array, bits: int,
@@ -101,6 +101,166 @@ def ws_ocs_matmul(x: jax.Array, w_data: jax.Array, w_scale: jax.Array, *,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bk), lambda k, m: (m, k)),
         out_shape=jax.ShapeDtypeStruct((M, K), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(*args)
+
+
+# ---------------------------------------------------------------------------
+# Variant C: fused-epilogue / fused-prologue family (DESIGN.md §7)
+#
+# The paper's operator-fusion claim (Fig 9b) is that the nonlinear stages
+# ride inside the GEMM pipeline instead of round-tripping fp32 tensors
+# through HBM. ``fused_matmul`` realizes that on TPU: while the (bm × bk)
+# accumulator is still in VMEM it applies, in order,
+#
+#   prologue   group-RMSNorm of the input row tile (paper eq 2 — the
+#              per-group partial Σx² is computed on the already-loaded
+#              (bm × N) tile, so the pre-norm costs zero extra HBM reads)
+#   epilogue   activation-scale multiply → SiLU/GELU (optionally GLU-gated
+#              by a second GEMM against the *same* resident input tile)
+#              → bias add → residual add → optional re-quantization to
+#              int8 for the next W4A8 GEMM.
+#
+# Every stage is optional and composable; the unfused reference is the
+# same stages as separate jnp ops (ref.fused_matmul_ref).
+# ---------------------------------------------------------------------------
+
+def _apply_act(acc: jax.Array, act: str) -> jax.Array:
+    if act == "silu":
+        return jax.nn.silu(acc)
+    if act == "gelu":
+        return jax.nn.gelu(acc)
+    assert act == "none", act
+    return acc
+
+
+def _fused_kernel(refs, *, bits, n, act, has, norm_group, norm_eps):
+    """refs arrive in the fixed order [x, w, s] + optional
+    [gamma, x_scale, w2, s2, bias, residual, out_scale] + [out]."""
+    it = iter(refs)
+    x_ref, w_ref, s_ref = next(it), next(it), next(it)
+    g_ref = next(it) if has["gamma"] else None
+    xs_ref = next(it) if has["x_scale"] else None
+    w2_ref = next(it) if has["glu"] else None
+    s2_ref = next(it) if has["glu"] else None
+    b_ref = next(it) if has["bias"] else None
+    r_ref = next(it) if has["residual"] else None
+    q_ref = next(it) if has["requant"] else None
+    o_ref = next(it)
+
+    x = x_ref[...].astype(jnp.float32)                     # (bm, N)
+    if g_ref is not None:
+        # group-RMSNorm prologue on the resident row tile (eq 2)
+        bm_, n_ = x.shape
+        xg = x.reshape(bm_, n_ // norm_group, norm_group)
+        partial_ms = jnp.mean(jnp.square(xg), axis=-1)
+        global_ms = jnp.mean(partial_ms, axis=-1, keepdims=True)
+        x = x * jax.lax.rsqrt(global_ms + norm_eps) \
+            * g_ref[...].astype(jnp.float32)
+
+    w = _dequant_block(w_ref[...], s_ref[...], bits, n)
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    if xs_ref is not None:
+        acc = acc * xs_ref[...].astype(jnp.float32)
+
+    if w2_ref is not None:
+        # GLU gate: second GEMM against the same resident input tile
+        w2 = _dequant_block(w2_ref[...], s2_ref[...], bits, n)
+        acc2 = jnp.dot(x, w2, preferred_element_type=jnp.float32)
+        if xs_ref is not None:
+            acc2 = acc2 * xs_ref[...].astype(jnp.float32)
+        acc = _apply_act(acc, act) * acc2
+    else:
+        acc = _apply_act(acc, act)
+
+    if b_ref is not None:
+        acc = acc + b_ref[...].astype(jnp.float32)
+    if r_ref is not None:
+        acc = acc + r_ref[...].astype(jnp.float32)
+
+    if q_ref is not None:
+        # re-quantize for the next W4A8 GEMM while still in VMEM
+        q = jnp.round(acc / q_ref[...].astype(jnp.float32))
+        o_ref[...] = jnp.clip(q, -128, 127).astype(jnp.int8)
+    else:
+        o_ref[...] = acc
+
+
+def fused_matmul(x: jax.Array, w_data: jax.Array, w_scale: jax.Array, *,
+                 bits: int = 4, gamma: Optional[jax.Array] = None,
+                 norm_group: int = 128, norm_eps: float = 1e-6,
+                 x_scale: Optional[jax.Array] = None, act: str = "none",
+                 w2_data: Optional[jax.Array] = None,
+                 w2_scale: Optional[jax.Array] = None,
+                 bias: Optional[jax.Array] = None,
+                 residual: Optional[jax.Array] = None,
+                 out_scale: Optional[jax.Array] = None,
+                 bm: int = 128, bk: int = 128,
+                 interpret: bool = False) -> jax.Array:
+    """WS-OCS matmul with fused prologue/epilogues (DESIGN.md §7).
+
+    x (M, N); w_data/w2_data packed-int4 (N//2, K) or int8 (N, K);
+    w_scale/w2_scale (G, K); gamma (N,) enables the group-RMSNorm
+    prologue; x_scale (M, 1) per-row activation dequant; bias (K,);
+    residual (M, K); out_scale (M, 1) enables the int8 re-quantization
+    epilogue (output dtype int8). Output (M, K) f32 (or int8)."""
+    M, N = x.shape
+    K = w_data.shape[1]
+    Np = w_data.shape[0]
+    G = w_scale.shape[0]
+    bm = min(bm, M)
+    bk = min(bk, K)
+    assert M % bm == 0 and K % bk == 0, (M, bm, K, bk)
+    if gamma is not None:
+        norm_group = min(norm_group, N)
+        assert N % norm_group == 0, (N, norm_group)
+    if w2_data is not None:
+        assert w2_data.shape == w_data.shape, (w2_data.shape, w_data.shape)
+        assert w2_scale is not None
+
+    has = {"gamma": gamma is not None, "x_scale": x_scale is not None,
+           "glu": w2_data is not None, "bias": bias is not None,
+           "residual": residual is not None,
+           "requant": out_scale is not None}
+
+    in_specs = [
+        pl.BlockSpec((bm, N), lambda k, m: (m, 0)),       # input-reuse buf
+        pl.BlockSpec((Np, bk), lambda k, m: (0, k)),      # stationary panel
+        pl.BlockSpec((G, bk), lambda k, m: (0, k)),
+    ]
+    args = [x, w_data, w_scale]
+    if has["gamma"]:
+        in_specs.append(pl.BlockSpec((1, N), lambda k, m: (0, 0)))
+        args.append(gamma.reshape(1, N))
+    if has["x_scale"]:
+        in_specs.append(pl.BlockSpec((bm, 1), lambda k, m: (m, 0)))
+        args.append(x_scale)
+    if has["glu"]:
+        in_specs.append(pl.BlockSpec((Np, bk), lambda k, m: (0, k)))
+        in_specs.append(pl.BlockSpec((G, bk), lambda k, m: (0, k)))
+        args.extend([w2_data, w2_scale])
+    if has["bias"]:
+        in_specs.append(pl.BlockSpec((1, bk), lambda k, m: (0, k)))
+        args.append(bias.reshape(1, K))
+    if has["residual"]:
+        in_specs.append(pl.BlockSpec((bm, bk), lambda k, m: (m, k)))
+        args.append(residual)
+    if has["requant"]:
+        in_specs.append(pl.BlockSpec((bm, 1), lambda k, m: (m, 0)))
+        args.append(out_scale)
+
+    out_dtype = jnp.int8 if has["requant"] else jnp.float32
+    kernel = functools.partial(_fused_kernel, bits=bits, n=N, act=act,
+                               has=has, norm_group=norm_group,
+                               norm_eps=norm_eps)
+    return pl.pallas_call(
+        lambda *refs: kernel(refs),
+        grid=(K // bk, M // bm),                # WS-OCS order (k outermost)
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bk), lambda k, m: (m, k)),
+        out_shape=jax.ShapeDtypeStruct((M, K), out_dtype),
         compiler_params=pltpu.CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,

@@ -24,6 +24,7 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs import SHAPES, get_config, long_500k_supported
 from repro.configs.specs import input_specs
 from repro.launch import steps as st
@@ -132,7 +133,7 @@ def _lower_compile(cfg, shape, mesh, donate=True):
         rules = sh.decode_rules()
     else:
         rules = sh.SERVE_RULES
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         p_sh = st.param_shardings(cfg, mesh, rules)
         if kind == "train":
             from repro.parallel.flags import opt as _opt
@@ -169,7 +170,7 @@ def _lower_compile(cfg, shape, mesh, donate=True):
 def _cell_costs(cfg, shape, mesh, n_dev):
     """flops/bytes/wire + collectives for one compile."""
     _, lowered, compiled = _lower_compile(cfg, shape, mesh)
-    cost = compiled.cost_analysis() or {}
+    cost = compat.cost_analysis(compiled)
     try:
         hlo = compiled.as_text()
     except Exception:
@@ -238,7 +239,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     kind, lowered, compiled = _lower_compile(cfg, shape, mesh, donate=donate)
     t_compile = time.time() - t0
 
-    cost = compiled.cost_analysis() or {}
+    cost = compat.cost_analysis(compiled)
     try:
         mem = compiled.memory_analysis()
         mem_d = {

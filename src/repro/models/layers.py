@@ -217,6 +217,30 @@ def _split_heads(x: jax.Array, n: int, d: int) -> jax.Array:
     return x.reshape(x.shape[:-1] + (n, d))
 
 
+def _per_slot(idx) -> bool:
+    """A cache index is either a scalar () — whole-batch decode — or a
+    per-sequence (B,) vector (continuous batching: each slot decodes at
+    its own position)."""
+    return hasattr(idx, "ndim") and idx.ndim == 1
+
+
+def write_kv_cache(cache: Dict, k: jax.Array, v: jax.Array,
+                   cache_index) -> Dict:
+    """Write this step's K/V (B, S, Hkv, D) into the cache at
+    ``cache_index`` (scalar or per-slot vector, see ``_per_slot``)."""
+    idx = cache_index
+    ck, cv = cache["k"], cache["v"]
+    if _per_slot(idx):
+        upd = jax.vmap(
+            lambda c, u, i: jax.lax.dynamic_update_slice_in_dim(
+                c, u.astype(c.dtype), i, 0))
+        return {"k": upd(ck, k, idx), "v": upd(cv, v, idx)}
+    return {"k": jax.lax.dynamic_update_slice_in_dim(
+                ck, k.astype(ck.dtype), idx, 1),
+            "v": jax.lax.dynamic_update_slice_in_dim(
+                cv, v.astype(cv.dtype), idx, 1)}
+
+
 def apply_attention(p: Dict, cfg: ModelConfig, x: jax.Array,
                     pos: jax.Array, *, causal: bool = True,
                     window: Optional[int] = None,
@@ -241,35 +265,23 @@ def apply_attention(p: Dict, cfg: ModelConfig, x: jax.Array,
 
     new_cache = cache
     if cache is not None and kv_x is None:
-        # write this step's K/V into the cache at cache_index — a scalar
-        # () or a per-sequence (B,) vector (continuous batching: each
-        # slot decodes at its own position)
+        new_cache = write_kv_cache(cache, k, v, cache_index)
         idx = cache_index
-        per_slot = hasattr(idx, "ndim") and idx.ndim == 1
-        ck, cv = cache["k"], cache["v"]
-        if per_slot:
-            upd = jax.vmap(
-                lambda c, u, i: jax.lax.dynamic_update_slice_in_dim(
-                    c, u.astype(c.dtype), i, 0))
-            ck = upd(ck, k, idx)
-            cv = upd(cv, v, idx)
-        else:
-            ck = jax.lax.dynamic_update_slice_in_dim(
-                ck, k.astype(ck.dtype), idx, 1)
-            cv = jax.lax.dynamic_update_slice_in_dim(
-                cv, v.astype(cv.dtype), idx, 1)
-        new_cache = {"k": ck, "v": cv}
-        k, v = ck, cv
-        # mask out cache positions beyond idx + S (per-slot when vector)
+        per_slot = _per_slot(idx)
+        k, v = new_cache["k"], new_cache["v"]
         Sk = k.shape[1]
-        if per_slot:
-            valid = jnp.arange(Sk)[None, :] < (idx[:, None] + S)
-        else:
-            valid = jnp.arange(Sk) < (idx + S)
-        kq = jnp.swapaxes(q, 1, 2)
-        kk = jnp.swapaxes(k, 1, 2)
-        kv = jnp.swapaxes(v, 1, 2)
-        if S == 1:
+        if S == 1 and cfg.fuse_epilogue and cfg.use_fusion:
+            # fused single-dispatch decode: QK^T + group-softmax + PV in
+            # one kernel on the cache layout (DESIGN.md §7) — no (B,H,S)
+            # logits/probs tensors leave VMEM
+            lengths = idx + S if per_slot \
+                else jnp.full((B,), idx + S, jnp.int32)
+            out = ops.attention_decode(
+                q[:, 0], k, v, lengths,
+                group_size=cfg.softmax_group, use_lut=cfg.use_lut_softmax,
+                window=window)
+            out = out[:, :, None, :]             # (B, H, q=1, D)
+        elif S == 1:
             # decode: single query over the cache. Grouped-GQA einsums —
             # KV heads are NEVER repeated/transposed (a repeat forces
             # GSPMD to rematerialize a seq-sharded cache), and the cache
@@ -278,6 +290,11 @@ def apply_attention(p: Dict, cfg: ModelConfig, x: jax.Array,
             # score work shard-local with only tiny cross-shard reduces.
             G = H // Hkv
             qg = q[:, 0].reshape(B, Hkv, G, D)
+            # mask out cache positions beyond idx + S (per-slot: vector)
+            if per_slot:
+                valid = jnp.arange(Sk)[None, :] < (idx[:, None] + S)
+            else:
+                valid = jnp.arange(Sk) < (idx + S)
             # cache stays bf16 (no f32 copies of S-length tensors); the
             # MXU-style f32 accumulation comes from preferred_element_type
             logits = jnp.einsum("bhgd,bshd->bhgs", qg, k,
@@ -305,6 +322,9 @@ def apply_attention(p: Dict, cfg: ModelConfig, x: jax.Array,
             # prefill into cache: attend causally over the written prefix
             # (prefill always starts at a static cache_index of 0)
             assert isinstance(idx, int) and idx == 0, "prefill needs idx=0"
+            kq = jnp.swapaxes(q, 1, 2)
+            kk = jnp.swapaxes(k, 1, 2)
+            kv = jnp.swapaxes(v, 1, 2)
             out = ops.attention(kq, kk[:, :, :S], kv[:, :, :S],
                                 causal=causal, window=window,
                                 use_lut=cfg.use_lut_softmax)
@@ -352,6 +372,89 @@ def apply_mlp(p: Dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
     else:
         h = jax.nn.gelu(apply_linear(p["wi"], x, cfg))
     return apply_linear(p["wo"], h, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Fused-epilogue decode layer (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+def _quantized(p: Dict) -> bool:
+    return isinstance(p.get("w"), dict)
+
+
+def fused_decode_applicable(lp: Dict, cfg: ModelConfig, x: jax.Array,
+                            cache: Optional[Dict]) -> bool:
+    """The whole-layer fused chain handles the common dense decode case:
+    S=1, RMSNorm pre-norm, every linear quantized for WS-OCS."""
+    return (cfg.fuse_epilogue and cfg.use_fusion and cache is not None
+            and x.shape[1] == 1 and cfg.norm == "rmsnorm"
+            and all(_quantized(lp["attn"][k])
+                    for k in ("wq", "wk", "wv", "wo"))
+            and all(_quantized(v) for v in lp["mlp"].values()))
+
+
+def _fused_linear(p: Dict, x2: jax.Array, **kw) -> jax.Array:
+    w = p["w"]
+    bits = 4 if w["q"].dtype == jnp.uint8 else 8
+    return ops.fused_matmul(x2, w["q"], w["scale"], bits=bits,
+                            bias=p.get("b"), **kw)
+
+
+def apply_decoder_layer_fused(lp: Dict, cfg: ModelConfig, x: jax.Array,
+                              pos: jax.Array, cache: Dict, cache_index,
+                              window: Optional[int] = None):
+    """One decode step (B, 1, d) as a chain of fused kernels: each linear
+    carries its pre-norm as a prologue and its add as an epilogue, the
+    SwiGLU pair collapses to one dual-GEMM dispatch, and attention is the
+    single-dispatch decode kernel — no S-length or d_ff-size fp32
+    intermediate ever round-trips HBM (DESIGN.md §7). Only the tiny
+    (B, H, D) rope rotation and the KV-cache write stay as jnp ops."""
+    B, S, d = x.shape
+    H, Hkv, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    x2 = x.reshape(B, d)
+    ng = min(cfg.norm_group, d)
+    if d % ng != 0:
+        ng = d
+    g1 = lp["ln1"]["gamma"]
+
+    q = _fused_linear(lp["attn"]["wq"], x2, gamma=g1, norm_group=ng)
+    k = _fused_linear(lp["attn"]["wk"], x2, gamma=g1, norm_group=ng)
+    v = _fused_linear(lp["attn"]["wv"], x2, gamma=g1, norm_group=ng)
+    q = q.astype(x.dtype).reshape(B, 1, H, D)
+    k = k.astype(x.dtype).reshape(B, 1, Hkv, D)
+    v = v.astype(x.dtype).reshape(B, 1, Hkv, D)
+    if cfg.rope_style != "none":
+        q = apply_rope(q, pos, cfg)
+        k = apply_rope(k, pos, cfg)
+    new_cache = write_kv_cache(cache, k, v, cache_index)
+
+    idx = cache_index
+    lengths = (idx + 1) if _per_slot(idx) \
+        else jnp.full((B,), idx + 1, jnp.int32)
+    attn = ops.attention_decode(
+        q[:, 0], new_cache["k"], new_cache["v"], lengths,
+        group_size=cfg.softmax_group, use_lut=cfg.use_lut_softmax,
+        window=window)
+    attn2 = attn.reshape(B, H * D).astype(x.dtype)
+    x1 = _fused_linear(lp["attn"]["wo"], attn2,
+                       residual=x2).astype(x.dtype)     # + residual, fused
+
+    mp = lp["mlp"]
+    if cfg.parallel_block:                    # attn ∥ mlp share ln1
+        h_src, res, g2 = x2, x1, g1
+    else:
+        h_src, res, g2 = x1, x1, lp["ln2"]["gamma"]
+    if "wg" in mp:
+        # SwiGLU: gate GEMM + up GEMM + SiLU + product in one dispatch
+        h = _fused_linear(mp["wg"], h_src, gamma=g2, norm_group=ng,
+                          act="silu", w2_data=mp["wi"]["w"]["q"],
+                          w2_scale=mp["wi"]["w"]["scale"])
+    else:
+        h = _fused_linear(mp["wi"], h_src, gamma=g2, norm_group=ng,
+                          act="gelu")
+    out = _fused_linear(mp["wo"], h.astype(x.dtype),
+                        residual=res).astype(x.dtype)
+    return out.reshape(B, 1, d), new_cache
 
 
 # ---------------------------------------------------------------------------

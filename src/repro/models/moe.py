@@ -109,7 +109,8 @@ def _constrain_ep(xe: jax.Array) -> jax.Array:
     if axis is None or xe.ndim != 4:
         return xe
     from jax.sharding import PartitionSpec as P
-    mesh = jax.sharding.get_abstract_mesh()
+    from repro.compat import get_abstract_mesh
+    mesh = get_abstract_mesh()
     if mesh is None or not mesh.shape or axis not in mesh.shape:
         return xe
     if xe.shape[1] % mesh.shape[axis] != 0:

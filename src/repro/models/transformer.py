@@ -48,6 +48,10 @@ def axes(cfg: ModelConfig) -> Dict:
 
 def _layer_fn(cfg: ModelConfig, x: jax.Array, pos: jax.Array, lp: Dict,
               cache: Optional[Dict], cache_index) -> Tuple[jax.Array, Optional[Dict]]:
+    if L.fused_decode_applicable(lp, cfg, x, cache):
+        # single-dispatch-per-op decode chain (DESIGN.md §7)
+        return L.apply_decoder_layer_fused(lp, cfg, x, pos, cache,
+                                           cache_index)
     h = L.apply_norm(lp["ln1"], x, cfg)
     attn_out, new_cache = L.apply_attention(
         lp["attn"], cfg, h, pos, causal=True, cache=cache,

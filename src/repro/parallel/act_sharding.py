@@ -17,7 +17,8 @@ from jax.sharding import PartitionSpec as P
 
 
 def _ambient_mesh():
-    m = jax.sharding.get_abstract_mesh()
+    from repro.compat import get_abstract_mesh
+    m = get_abstract_mesh()
     return m if m is not None and m.shape else None
 
 

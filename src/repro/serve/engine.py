@@ -65,15 +65,65 @@ def quantize_params(params: Dict, cfg: ModelConfig,
     return walk(params)
 
 
+def _subjaxprs(v):
+    vals = v if isinstance(v, (list, tuple)) else [v]
+    for u in vals:
+        if hasattr(u, "jaxpr"):          # ClosedJaxpr
+            yield u.jaxpr
+        elif hasattr(u, "eqns"):         # raw Jaxpr
+            yield u
+
+
+def count_eqns(jaxpr, primitive: Optional[str] = None) -> int:
+    """Equations in a jaxpr, descending into control-flow bodies (scan /
+    cond / pjit / remat — each counted once, as dispatch *shape*, not
+    trip count) but treating a ``pallas_call`` as ONE dispatch: its
+    inner jaxpr is the kernel body, already fused on-chip. With
+    ``primitive`` set, count only equations of that primitive (e.g.
+    "pallas_call" → kernel dispatches)."""
+    n = 0
+    for eqn in jaxpr.eqns:
+        if primitive is None or eqn.primitive.name == primitive:
+            n += 1
+        if eqn.primitive.name == "pallas_call":
+            continue
+        for v in eqn.params.values():
+            for sub in _subjaxprs(v):
+                n += count_eqns(sub, primitive)
+    return n
+
+
 class Engine:
     def __init__(self, cfg: ModelConfig, params: Dict, max_len: int = 512):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
+        self._dec_jaxprs: Dict[int, object] = {}
         self._prefill = jax.jit(
             lambda p, b, c: api.prefill_step(p, cfg, b, c))
         self._decode = jax.jit(
             lambda p, t, c, i: api.serve_step(p, cfg, t, c, i))
+
+    def _decode_jaxpr(self, batch: int):
+        """Decode-step jaxpr, traced once per batch size (tracing the
+        scanned model costs seconds; counting it is cheap). Cached under
+        the kernel-dispatch mode active at first call — toggle
+        ``ops.force_pallas`` before the first count, not between."""
+        if batch not in self._dec_jaxprs:
+            cache = api.init_cache(self.cfg, batch, self.max_len)
+            tok = jnp.zeros((batch, 1), jnp.int32)
+            self._dec_jaxprs[batch] = jax.make_jaxpr(
+                lambda p, t, c, i: api.serve_step(p, self.cfg, t, c, i))(
+                self.params, tok, cache, jnp.asarray(0, jnp.int32))
+        return self._dec_jaxprs[batch]
+
+    def decode_eqn_count(self, batch: int = 1,
+                         primitive: Optional[str] = None) -> int:
+        """Op dispatches (jaxpr equations before XLA fusion) issued by
+        one decode step — the fused-vs-unfused metric of DESIGN.md §7,
+        reported in BENCH_pr3.json. ``primitive="pallas_call"`` counts
+        kernel launches only."""
+        return count_eqns(self._decode_jaxpr(batch).jaxpr, primitive)
 
     def generate(self, tokens: np.ndarray, sc: ServeConfig,
                  extra_batch: Optional[Dict] = None) -> np.ndarray:

@@ -23,11 +23,13 @@ from pathlib import Path
 from typing import Any, Dict, Optional, Tuple
 
 import jax
+
+from repro import compat
 import numpy as np
 
 
 def _flatten_with_paths(tree):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    flat, treedef = compat.tree_flatten_with_path(tree)
     out = {}
     for path, leaf in flat:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
@@ -107,7 +109,7 @@ def restore(ckpt_dir: str, step: Optional[int], params_like, opt_like,
 
 
 def _iter_in_flatten_order(tree):
-    flat, _ = jax.tree.flatten_with_path(tree)
+    flat, _ = compat.tree_flatten_with_path(tree)
     for path, leaf in flat:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                        for p in path)

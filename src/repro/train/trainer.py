@@ -20,8 +20,10 @@ from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+
 import numpy as np
 
+from repro import compat
 from repro.configs.base import ModelConfig
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch import steps as st
@@ -80,7 +82,7 @@ class Trainer:
         self.data = SyntheticLM(dc, cfg)
         self.step = 0
 
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             self.p_sh = st.param_shardings(cfg, mesh, self.rules)
             self.o_sh = st.opt_shardings(cfg, mesh, self.rules, self.oc)
             params_h = api.init(jax.random.PRNGKey(dc.seed), cfg)
@@ -118,7 +120,7 @@ class Trainer:
             on_metrics: Optional[Callable[[int, Dict], None]] = None):
         steps = steps if steps is not None else self.tc.total_steps
         target = self.step + steps
-        with jax.set_mesh(self.mesh):
+        with compat.set_mesh(self.mesh):
             while self.step < target:
                 batch = self.data.batch_at(self.step)
                 batch = jax.tree.map(jnp.asarray, batch)

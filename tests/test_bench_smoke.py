@@ -1,0 +1,29 @@
+"""Tier-1 exercise of the benchmark perf rows: the smoke gate must run
+the PR 3 fused rows end-to-end and write BENCH_pr3.json."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def test_bench_smoke_fast_rows(tmp_path):
+    out = tmp_path / "BENCH_pr3.json"
+    env = dict(os.environ, PYTHONPATH="src", REPRO_BENCH_JSON=str(out))
+    proc = subprocess.run(
+        [sys.executable, "benchmarks/smoke.py", "--fast"], cwd=ROOT,
+        capture_output=True, text=True, timeout=560, env=env)
+    assert proc.returncode == 0, proc.stderr[-3000:] + proc.stdout[-1000:]
+    data = json.loads(out.read_text())
+    names = {r["name"] for r in data["rows"]}
+    assert {"kernel_fused_norm_glu_1024x2048",
+            "kernel_fused_attn_decode_512",
+            "decode_dispatch_unfused", "decode_dispatch_fused",
+            "decode_dispatch_reduction"} <= names, names
+    # acceptance: fused decode dispatches strictly fewer jaxpr eqns
+    by = {r["name"]: r["derived"] for r in data["rows"]}
+    eq = {t: int(by[f"decode_dispatch_{t}"].split(";")[0].split("=")[1])
+          for t in ("unfused", "fused")}
+    assert eq["fused"] < eq["unfused"], eq

@@ -1,0 +1,209 @@
+"""Fused-epilogue WS-OCS kernels and the single-dispatch attention
+decode kernel vs their unfused compositions (ref.py), plus the engine
+dispatch-count acceptance check (ISSUE 3 / DESIGN.md §7)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quant import QuantConfig, quantize_weight
+from repro.kernels import ops, ref
+from repro.kernels.attention_decode import attention_decode
+from repro.kernels.ws_ocs_matmul import fused_matmul
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def _qw(rng, n, k, bits=4, group=64):
+    mode = "w4a8" if bits == 4 else "w8a8"
+    w = rng.standard_normal((n, k)).astype(np.float32)
+    return quantize_weight(jnp.asarray(w), QuantConfig(mode, group))
+
+
+def _assert_close(got, want, tol=1e-5):
+    """|got − want| ≤ tol relative to the output magnitude (the 1e-5
+    acceptance bound; GLU products reach O(10²-10³) so a raw atol would
+    test fp32 round-off, not the kernel)."""
+    scale = max(1.0, float(np.abs(np.asarray(want)).max()))
+    err = float(np.abs(np.asarray(got) - np.asarray(want)).max())
+    assert err <= tol * scale, (err, scale)
+
+
+# ---------------------------------------------------------------------------
+# fused matmul epilogues
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("M,N,K", [(8, 256, 128), (16, 128, 64)])
+def test_fused_epilogue_bias_residual_silu(rng, M, N, K, bits):
+    qw = _qw(rng, N, K, bits)
+    x = jnp.asarray(rng.standard_normal((M, N)).astype(np.float32))
+    bias = jnp.asarray(rng.standard_normal(K).astype(np.float32))
+    res = jnp.asarray(rng.standard_normal((M, K)).astype(np.float32))
+    kw = dict(bits=bits, act="silu", bias=bias, residual=res)
+    got = fused_matmul(x, qw.data, qw.scale, bm=min(8, M), bk=min(64, K),
+                       interpret=True, **kw)
+    want = ref.fused_matmul_ref(x, qw.data, qw.scale, **kw)
+    _assert_close(got, want)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_fused_rmsnorm_prologue_glu(rng, bits):
+    """Group-RMSNorm prologue + SwiGLU dual-GEMM gate in one kernel."""
+    M, N, K = 8, 256, 128
+    qw, qw2 = _qw(rng, N, K, bits), _qw(rng, N, K, bits)
+    x = jnp.asarray(rng.standard_normal((M, N)).astype(np.float32))
+    gamma = jnp.asarray(rng.standard_normal(N).astype(np.float32))
+    kw = dict(bits=bits, gamma=gamma, norm_group=64, act="silu",
+              w2_data=qw2.data, w2_scale=qw2.scale)
+    got = fused_matmul(x, qw.data, qw.scale, bm=4, bk=64, interpret=True,
+                       **kw)
+    want = ref.fused_matmul_ref(x, qw.data, qw.scale, **kw)
+    _assert_close(got, want)
+
+
+def test_fused_gelu_bias(rng):
+    M, N, K = 8, 128, 64
+    qw = _qw(rng, N, K)
+    x = jnp.asarray(rng.standard_normal((M, N)).astype(np.float32))
+    bias = jnp.asarray(rng.standard_normal(K).astype(np.float32))
+    gamma = jnp.ones(N)
+    kw = dict(bits=4, gamma=gamma, norm_group=128, act="gelu", bias=bias)
+    got = fused_matmul(x, qw.data, qw.scale, bm=8, bk=64, interpret=True,
+                       **kw)
+    want = ref.fused_matmul_ref(x, qw.data, qw.scale, **kw)
+    _assert_close(got, want)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_fused_requant_int8_epilogue(rng, bits):
+    """Activation re-quantization to int8 for the next W4A8 GEMM happens
+    inside the kernel and matches the two-pass reference bit-for-bit."""
+    M, N, K = 16, 128, 128
+    qw = _qw(rng, N, K, bits)
+    x = jnp.asarray(rng.standard_normal((M, N)).astype(np.float32))
+    osc = jnp.asarray(
+        (np.abs(rng.standard_normal((M, 1))) + 0.5).astype(np.float32))
+    got = fused_matmul(x, qw.data, qw.scale, bits=bits, out_scale=osc,
+                       bm=8, bk=64, interpret=True)
+    want = ref.fused_matmul_ref(x, qw.data, qw.scale, bits=bits,
+                                out_scale=osc)
+    assert got.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fused_x_scale_int8_activations(rng):
+    """int8 activations with per-row scale through the fused path."""
+    from repro.core.quant import quantize_int8
+    M, N, K = 8, 128, 64
+    qw = _qw(rng, N, K)
+    xf = rng.standard_normal((M, N)).astype(np.float32)
+    xq, xs = quantize_int8(jnp.asarray(xf), axis=-1)
+    kw = dict(bits=4, x_scale=xs, act="silu")
+    got = fused_matmul(xq, qw.data, qw.scale, bm=8, bk=64, interpret=True,
+                       **kw)
+    want = ref.fused_matmul_ref(xq, qw.data, qw.scale, **kw)
+    _assert_close(got, want)
+
+
+def test_plain_fused_matches_unfused_kernel(rng):
+    """No epilogue requested → identical to the plain WS-OCS kernel."""
+    from repro.kernels.ws_ocs_matmul import ws_ocs_matmul
+    M, N, K = 16, 128, 64
+    qw = _qw(rng, N, K)
+    x = jnp.asarray(rng.standard_normal((M, N)).astype(np.float32))
+    got = fused_matmul(x, qw.data, qw.scale, bits=4, bm=8, bk=32,
+                       interpret=True)
+    want = ws_ocs_matmul(x, qw.data, qw.scale, bits=4, bm=8, bk=32,
+                         interpret=True)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fused attention decode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("use_lut", [True, False])
+@pytest.mark.parametrize("B,H,Hkv,S,D", [(2, 8, 2, 256, 32),
+                                         (1, 4, 4, 128, 64)])
+def test_attention_decode_kernel_vs_ref(rng, B, H, Hkv, S, D, use_lut):
+    q = jnp.asarray(rng.standard_normal((B, H, D)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((B, S, Hkv, D)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((B, S, Hkv, D)).astype(np.float32))
+    lens = jnp.asarray(rng.integers(1, S + 1, size=(B,)), jnp.int32)
+    got = attention_decode(q, k, v, lens, group_size=64, use_lut=use_lut,
+                           block_k=128, interpret=True)
+    want = ref.attention_decode_ref(q, k, v, lens, group_size=64,
+                                    use_lut=use_lut)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_attention_decode_window(rng):
+    B, H, Hkv, S, D = 2, 4, 2, 256, 32
+    q = jnp.asarray(rng.standard_normal((B, H, D)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((B, S, Hkv, D)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((B, S, Hkv, D)).astype(np.float32))
+    lens = jnp.asarray([200, 77], jnp.int32)
+    got = attention_decode(q, k, v, lens, group_size=64, use_lut=True,
+                           window=64, block_k=64, interpret=True)
+    want = ref.attention_decode_ref(q, k, v, lens, group_size=64,
+                                    use_lut=True, window=64)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_attention_decode_matches_exact_softmax(rng):
+    """With exact exp and full-length prefix the kernel equals plain
+    softmax attention over the cache."""
+    B, H, S, D = 1, 4, 128, 32
+    q = jnp.asarray(rng.standard_normal((B, H, D)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((B, S, H, D)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((B, S, H, D)).astype(np.float32))
+    lens = jnp.full((B,), S, jnp.int32)
+    got = attention_decode(q, k, v, lens, group_size=64, use_lut=False,
+                           interpret=True)
+    logits = jnp.einsum("bhd,bshd->bhs", q, k) * D ** -0.5
+    probs = jax.nn.softmax(logits, axis=-1)
+    want = jnp.einsum("bhs,bshd->bhd", probs, v)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# engine-level: fused decode chain ≡ unfused, with fewer dispatches
+# ---------------------------------------------------------------------------
+
+def _smoke_engine(fused: bool):
+    from repro.configs import get_config
+    from repro.models import api
+    from repro.serve.engine import Engine, quantize_params
+    cfg = get_config("llama2-7b", smoke=True).replace(
+        dtype=jnp.float32, quant_mode="w4a8", use_lut_softmax=True,
+        fuse_epilogue=fused)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    return Engine(cfg, quantize_params(params, cfg), max_len=64)
+
+
+def test_fused_decode_path_matches_unfused_end_to_end():
+    from repro.serve.engine import ServeConfig
+    toks = np.arange(8, dtype=np.int32).reshape(2, 4) + 3
+    sc = ServeConfig(max_new_tokens=6)
+    out_u = _smoke_engine(False).generate(toks, sc)
+    out_f = _smoke_engine(True).generate(toks, sc)
+    np.testing.assert_array_equal(out_u, out_f)
+
+
+def test_fused_decode_fewer_dispatches():
+    """Acceptance: the fused decode step issues measurably fewer op
+    dispatches (jaxpr eqns) and fewer kernel launches (pallas_call)."""
+    ops.force_pallas(True)
+    try:
+        eng_u, eng_f = _smoke_engine(False), _smoke_engine(True)
+        eq_u, eq_f = eng_u.decode_eqn_count(), eng_f.decode_eqn_count()
+        pl_u = eng_u.decode_eqn_count(primitive="pallas_call")
+        pl_f = eng_f.decode_eqn_count(primitive="pallas_call")
+    finally:
+        ops.force_pallas(None)
+    assert eq_f < eq_u, (eq_f, eq_u)
+    assert pl_f < pl_u, (pl_f, pl_u)

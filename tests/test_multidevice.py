@@ -30,8 +30,9 @@ def test_gpipe_pipeline_matches_sequential():
     from repro.parallel.pipeline import pipeline_apply
 
     S, B, D = 4, 16, 32
-    mesh = jax.make_mesh((S,), ("stage",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro import compat
+    mesh = compat.make_mesh((S,), ("stage",),
+                            axis_types=(compat.AxisType.Auto,))
     rng = np.random.default_rng(0)
     ws = jnp.asarray(rng.standard_normal((S, D, D)).astype(np.float32) * 0.3)
     bs = jnp.asarray(rng.standard_normal((S, D)).astype(np.float32) * 0.1)
@@ -41,7 +42,7 @@ def test_gpipe_pipeline_matches_sequential():
         w, b = params
         return jnp.tanh(h @ w + b)
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         y = pipeline_apply(mesh, stage, (ws, bs), x, n_micro=4)
 
     ref = x
@@ -62,8 +63,9 @@ def test_compressed_pod_psum_error_bound():
     from jax.sharding import PartitionSpec as P
     from repro.parallel.compress import compressed_psum
 
-    mesh = jax.make_mesh((4, 2), ("pod", "data"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro import compat
+    mesh = compat.make_mesh((4, 2), ("pod", "data"),
+                            axis_types=(compat.AxisType.Auto,) * 2)
     rng = np.random.default_rng(0)
     g = jnp.asarray(rng.standard_normal((4, 256)).astype(np.float32))
 
@@ -72,7 +74,7 @@ def test_compressed_pod_psum_error_bound():
     def f(x):
         return compressed_psum(x, "pod")
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         got = f(g)
     # every pod shard now holds the sum over the pod axis
     want = jnp.broadcast_to(g.sum(0, keepdims=True), g.shape)
@@ -95,8 +97,9 @@ def test_sharded_train_step_multidevice():
     from repro.train.optimizer import OptConfig
 
     cfg = get_config("llama2-7b", smoke=True).replace(dtype=jnp.float32)
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro import compat
+    mesh = compat.make_mesh((4, 2), ("data", "model"),
+                            axis_types=(compat.AxisType.Auto,) * 2)
     dc = DataConfig(seed=0, batch_size=8, seq_len=32,
                     vocab_size=cfg.vocab_size)
     tr = Trainer(cfg, mesh, dc, TrainConfig(total_steps=6),

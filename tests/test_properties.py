@@ -3,6 +3,10 @@ round-trips, dataflow access-count algebra (Table I), RCW pipeline
 bounds, LUT softmax behavior."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional dev dep; "
+                    "pip install -r requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import fusion

@@ -19,7 +19,8 @@ def _fake_mesh(shape=(4, 2), axes=("data", "model")):
     if len(jax.devices()) >= n:
         return jax.make_mesh(shape, axes)
     # abstract mesh stand-in with a .shape mapping is enough for spec_for
-    return jax.sharding.AbstractMesh(shape, axes)
+    from repro.compat import abstract_mesh
+    return abstract_mesh(shape, axes)
 
 
 def test_divisible_dims_shard():
@@ -71,7 +72,8 @@ def test_full_config_spec_coverage(arch):
     """Every full-size param resolves to a valid spec on the production
     mesh shape; TP must actually shard the big matmuls."""
     cfg = get_config(arch)
-    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    from repro.compat import abstract_mesh
+    mesh = abstract_mesh((16, 16), ("data", "model"))
     ax = api.axes(cfg)
     shapes = jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0), cfg))
     flat_ax = jax.tree.leaves(ax, is_leaf=is_axes_leaf)
