@@ -32,6 +32,11 @@ from repro.sim import perf_model as pm
 BENCH_JSON = Path(os.environ.get(
     "REPRO_BENCH_JSON",
     Path(__file__).resolve().parent.parent / "BENCH_pr3.json"))
+# PR 5 rows (paged-vs-dense serving) land in their own artifact so the
+# paged acceptance numbers are greppable without the kernel rows
+PR5_JSON = Path(os.environ.get(
+    "REPRO_BENCH_PR5_JSON",
+    Path(__file__).resolve().parent.parent / "BENCH_pr5.json"))
 _ROWS = []
 
 
@@ -233,8 +238,68 @@ def bench_decode_dispatch() -> None:
          f"eqn_reduction={red:.3f};paper_fusion_latency_reduction=0.6917")
 
 
+def bench_paged() -> None:
+    """PR 5 rows: dense ContinuousBatcher vs paged Scheduler on a skewed
+    workload (mixed 8–56-token prompts behind a shared 16-token system
+    prefix) at slots ∈ {4, 16} — wall tokens/sec (incl. compile; CPU ref
+    lowering, indicative) and the peak KV blocks the paged pool actually
+    referenced vs the slots×max_len dense allocation."""
+    from repro.configs import get_config
+    from repro.models import api
+    from repro.serve.batching import ContinuousBatcher, Request
+    from repro.serve.paged import Scheduler
+
+    cfg = get_config("llama2-7b", smoke=True).replace(
+        dtype=jnp.float32, num_layers=2, d_model=64, num_heads=2,
+        num_kv_heads=2, d_ff=128, vocab_size=256)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    max_len, bs, new = 128, 16, 6
+    sysp = rng.integers(1, cfg.vocab_size, size=16).tolist()
+    lens = [8, 40, 16, 56, 24, 8, 32, 48, 8, 16, 40, 24]
+    reqs = [sysp + rng.integers(1, cfg.vocab_size, size=n).tolist()
+            for n in lens]
+
+    for slots in (4, 16):
+        def run_dense():
+            cb = ContinuousBatcher(cfg, params, slots=slots,
+                                   max_len=max_len)
+            for i, p in enumerate(reqs):
+                cb.submit(Request(rid=i, prompt=p, max_new=new))
+            return cb.run()
+
+        def run_paged():
+            sch = Scheduler(cfg, params, slots=slots, max_len=max_len,
+                            block_size=bs, chunk=16)
+            for i, p in enumerate(reqs):
+                sch.submit(Request(rid=i, prompt=p, max_new=new))
+            return sch.run(), sch
+
+        t0 = time.perf_counter()
+        run_dense()
+        t_dense = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        _, sch = run_paged()
+        t_paged = time.perf_counter() - t0
+        toks = len(reqs) * new
+        dense_blocks = slots * (max_len // bs)
+        amort = sch.stream_amortization_report()
+        _row(f"paged_dense_tok_s_slots{slots}", t_dense * 1e6,
+             f"tok_s={toks / t_dense:.1f};kv_blocks={dense_blocks}")
+        _row(f"paged_paged_tok_s_slots{slots}", t_paged * 1e6,
+             f"tok_s={toks / t_paged:.1f};"
+             f"peak_kv_blocks={sch.pool.peak_in_use};"
+             f"dense_equiv_blocks={dense_blocks};"
+             f"kv_bytes_peak={sch.kv_bytes_peak()};"
+             f"kv_bytes_dense={sch.kv_bytes_dense_equiv()}")
+        _row(f"paged_stream_amortization_slots{slots}", 0.0,
+             f"mean_active={amort['mean_active']:.2f};"
+             f"speedup_vs_b1={amort['speedup_vs_b1']:.2f}x")
+
+
 ALL_BENCHES = [bench_table1, bench_fig8, bench_fig9, bench_table2,
-               bench_kernels, bench_fused, bench_decode_dispatch]
+               bench_kernels, bench_fused, bench_decode_dispatch,
+               bench_paged]
 
 
 def run_benches(benches, keep_going: bool = False):
@@ -259,6 +324,16 @@ def write_json(target=None) -> Path:
     target = Path(target) if target else BENCH_JSON
     target.write_text(json.dumps({"rows": _ROWS}, indent=2) + "\n")
     print(f"# wrote {target}")
+    pr5 = [r for r in _ROWS if r["name"].startswith("paged_")]
+    if pr5:
+        if target == BENCH_JSON:
+            pr5_target = PR5_JSON
+        elif "pr3" in target.name:    # mirror redirects (e.g. fast mode)
+            pr5_target = target.with_name(target.name.replace("pr3", "pr5"))
+        else:
+            pr5_target = target.with_name("pr5_" + target.name)
+        pr5_target.write_text(json.dumps({"rows": pr5}, indent=2) + "\n")
+        print(f"# wrote {pr5_target}")
     return target
 
 

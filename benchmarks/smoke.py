@@ -3,8 +3,9 @@ row raises — so the perf harness stays green in tier-1 workflows
 (`make bench`, and the fast subset via tests/test_bench_smoke.py).
 
 Usage: PYTHONPATH=src python benchmarks/smoke.py [--fast]
-  --fast  only the PR 3 fused-vs-unfused rows + the dispatch-count
-          metric (the rows this PR's acceptance criteria gate on)
+  --fast  only the acceptance-gated row groups: the PR 3 fused-vs-unfused
+          rows + dispatch-count metric, and the PR 5 paged-vs-dense
+          serving rows (BENCH_pr5.fast.json)
 """
 from __future__ import annotations
 
@@ -16,8 +17,8 @@ import run  # benchmarks/run.py (same directory when run as a script)
 
 def main(argv) -> int:
     fast = "--fast" in argv
-    benches = [run.bench_fused, run.bench_decode_dispatch] if fast \
-        else run.ALL_BENCHES
+    benches = [run.bench_fused, run.bench_decode_dispatch,
+               run.bench_paged] if fast else run.ALL_BENCHES
     # fast mode must not clobber the full-row artifact (unless the
     # caller redirected the output explicitly)
     target = run.BENCH_JSON

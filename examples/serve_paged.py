@@ -1,0 +1,83 @@
+"""Paged-KV serving demo (DESIGN.md §10): a skewed workload — short chat
+turns and long documents behind one shared system prefix — through the
+block-pool Scheduler vs the dense-slot ContinuousBatcher, checking
+token-for-token agreement and reporting the KV-memory and weight-stream
+amortization wins paging buys.
+
+    PYTHONPATH=src python examples/serve_paged.py [--slots 4] [--new 12]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import api
+from repro.serve.batching import ContinuousBatcher, Request
+from repro.serve.paged import Scheduler
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--new", type=int, default=12)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--chunk", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_config("llama2-7b", smoke=True).replace(
+        dtype=jnp.float32, num_layers=2, d_model=128, d_ff=256,
+        num_heads=4, num_kv_heads=2)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+
+    max_len = 256
+    system = rng.integers(2, cfg.vocab_size, size=32).tolist()
+    skew = [8, 120, 16, 180, 24, 8, 64, 150, 12, 40]
+    reqs = [Request(rid=i,
+                    prompt=system + rng.integers(
+                        2, cfg.vocab_size, size=n).tolist(),
+                    max_new=args.new)
+            for i, n in enumerate(skew)]
+
+    cb = ContinuousBatcher(cfg, params, slots=args.slots, max_len=max_len)
+    for r in reqs:
+        cb.submit(r)
+    t0 = time.perf_counter()
+    dense_out = cb.run()
+    t_dense = time.perf_counter() - t0
+
+    # half the dense block budget — prefix sharing + paging absorb it
+    nbmax = max_len // args.block_size
+    sch = Scheduler(cfg, params, slots=args.slots, max_len=max_len,
+                    block_size=args.block_size, chunk=args.chunk,
+                    num_blocks=args.slots * nbmax // 2 + 2)
+    for r in reqs:
+        sch.submit(r)
+    t0 = time.perf_counter()
+    paged_out = sch.run()
+    t_paged = time.perf_counter() - t0
+
+    agree = all(dense_out[r.rid] == paged_out[r.rid] for r in reqs)
+    toks = sum(len(v) for v in paged_out.values())
+    amort = sch.stream_amortization_report()
+    print(f"slots={args.slots} requests={len(reqs)} "
+          f"prompts={min(skew)+32}..{max(skew)+32} tokens")
+    print(f"dense : {toks/t_dense:8.1f} tok/s  (wall {t_dense:.2f}s, "
+          f"kv blocks allocated {args.slots * nbmax})")
+    print(f"paged : {toks/t_paged:8.1f} tok/s  (wall {t_paged:.2f}s, "
+          f"peak kv blocks {sch.pool.peak_in_use}, "
+          f"pool {sch.pool.num_blocks})")
+    print(f"kv bytes: paged peak {sch.kv_bytes_peak():,} vs dense "
+          f"{sch.kv_bytes_dense_equiv():,} "
+          f"({sch.kv_bytes_peak()/sch.kv_bytes_dense_equiv():.0%})")
+    print(f"weight-stream amortization: mean active "
+          f"{amort['mean_active']:.2f} -> modeled "
+          f"{amort['speedup_vs_b1']:.2f}x over batch-1 decode")
+    print("token-for-token agreement dense vs paged:", agree)
+
+
+if __name__ == "__main__":
+    main()

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.kernels import attention_decode as _ad
 from repro.kernels import flash_attention as _fa
+from repro.kernels import paged_attention_decode as _pad
 from repro.kernels import selective_scan as _ss
 from repro.kernels import group_rmsnorm as _gr
 from repro.kernels import group_softmax as _gs
@@ -102,6 +103,27 @@ def attention_decode(q, k, v, lengths, *, group_size=64, use_lut=True,
                                     window=window)
 
 
+def paged_attention_decode(q, k_pool, v_pool, block_tables, lengths, *,
+                           group_size=64, use_lut=True, scale=None,
+                           window=None):
+    """Fused decode attention over a paged KV pool (DESIGN.md §10):
+    k_pool/v_pool (NB, BS, Hkv, D), block_tables (B, NBMAX). The Pallas
+    kernel gathers blocks through a scalar-prefetched table and caps the
+    softmax group at the block size BS; the ref path gathers to the
+    dense layout first and keeps the requested group, making it
+    bit-identical to the dense decode composition (serving equivalence
+    tests rely on this)."""
+    BS = k_pool.shape[1]
+    if _use_pallas() and BS % min(group_size, BS) == 0:
+        return _pad.paged_attention_decode(
+            q, k_pool, v_pool, block_tables, lengths,
+            group_size=min(group_size, BS), use_lut=use_lut, scale=scale,
+            window=window, interpret=_interpret())
+    return ref.paged_attention_decode_ref(
+        q, k_pool, v_pool, block_tables, lengths, group_size=group_size,
+        use_lut=use_lut, scale=scale, window=window)
+
+
 def group_softmax(x, group_size=64, use_lut=True):
     if _use_pallas() and use_lut and x.shape[-1] % min(group_size, x.shape[-1]) == 0:
         rows = 1
@@ -138,10 +160,17 @@ def group_layernorm(x, gamma, beta, group_size=128, eps=1e-5):
 
 
 def attention(q, k, v, *, causal=True, window=None, use_lut=False,
-              scale=None, block_q=128, block_k=128):
+              scale=None, block_q=128, block_k=128, q_offset=None):
     """Multi-head attention; flash kernel on TPU; off-TPU: the O(S)-memory
     flash-scan oracle for long sequences (REPRO_OPT_FLASH=1 — the §Perf
-    memory-term optimization), else the exact materialized oracle."""
+    memory-term optimization), else the exact materialized oracle.
+    ``q_offset`` (B,): chunked-prefill alignment (queries start at an
+    absolute offset over a longer gathered prefix) — exact oracle only;
+    a flash-kernel chunk path is a ROADMAP follow-on."""
+    if q_offset is not None:
+        return ref.attention_ref(q, k, v, causal=causal, window=window,
+                                 use_lut=use_lut, scale=scale,
+                                 q_offset=q_offset)
     Sq, Sk = q.shape[2], k.shape[2]
     if _use_pallas() and Sq % min(block_q, Sq) == 0 \
             and Sk % min(block_k, Sk) == 0:

@@ -1,0 +1,164 @@
+"""Paged fused attention decode kernel (DESIGN.md §10).
+
+The PR-3 fused decode kernel (`attention_decode.py`) reads K/V from the
+dense per-slot cache layout ``(B, S, Hkv, D)`` — a layout whose HBM
+footprint is ``slots × max_len`` regardless of how many tokens each
+request actually holds. The paged serving subsystem stores K/V as
+fixed-size *blocks* in a shared pool ``(NB, BS, Hkv, D)`` and maps each
+request's logical positions onto pool blocks through a per-request block
+table ``(B, NBMAX)``; blocks holding a shared prompt prefix appear in
+many tables but exist once in the pool.
+
+This kernel is the paged variant of the fused decode dispatch: the block
+table rides in as a *scalar-prefetch* operand so the K/V BlockSpec index
+maps gather pool blocks directly — the same "BlockSpec does the layout
+math" trick the dense kernel uses for GQA head sharing, extended to one
+level of indirection. The grid is block-aligned ``(B·Hkv, 2, NBMAX)``
+and validity is masked by the per-request ``lengths`` exactly as in the
+dense kernel, so table entries past a request's last block (padded with
+the reserved null block 0) contribute nothing.
+
+Group-softmax semantics: the paper's eq-(1) grouping is capped at the
+pool block size (``g = min(group_size, BS)``) because a group may not
+span two pool blocks (they are not adjacent in HBM). With exact exp the
+grouping is mathematically irrelevant (group softmax ≡ softmax); in LUT
+mode the oracle must be called with the same effective group size to
+match to fp32 round-off (``ops.paged_attention_decode`` does this when
+dispatching here). The two-sweep phase structure (exact global group-max
+first, then LUT-exp with late merge) is identical to the dense kernel —
+see DESIGN.md §7 for why a flash-style running rescale is not exact
+under the LUT.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.fusion import LUT_HI, LUT_LO, LUT_SEGMENTS, build_exp_lut
+from repro.kernels import pallas_compat as pltpu
+from repro.kernels.group_softmax import _lut_exp_block
+
+_NEG = -1e30
+
+
+def _kernel(bt_ref, q_ref, k_ref, v_ref, len_ref, ab_ref, o_ref,
+            mrun_ref, den_ref, acc_ref, *,
+            scale, group, use_lut, window, bs, gq):
+    ph, ji = pl.program_id(1), pl.program_id(2)
+    nb_max = pl.num_programs(2)
+
+    @pl.when((ph == 0) & (ji == 0))
+    def _():
+        mrun_ref[...] = jnp.full_like(mrun_ref, _NEG)
+        den_ref[...] = jnp.zeros_like(den_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[0, 0]
+    q = q_ref[0, 0].astype(jnp.float32)                     # (G, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)               # (bs, D)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    # logical position of this block = table slot ji (the index map read
+    # the pool block id; positions stay in request-logical order)
+    kpos = ji * bs + jax.lax.broadcasted_iota(jnp.int32, (gq, bs), 1)
+    mask = kpos < length
+    if window is not None:
+        mask = jnp.logical_and(mask, kpos > length - 1 - window)
+    s = jnp.where(mask, s, _NEG)
+    nb = bs // group
+    sg = s.reshape(gq, nb, group)
+    m_g = jnp.max(sg, axis=-1)                              # (G, nb)
+
+    @pl.when(ph == 0)
+    def _():
+        m_blk = jnp.max(m_g, axis=-1, keepdims=True)        # (G, 1)
+        mrun_ref[...] = jnp.maximum(mrun_ref[...],
+                                    jnp.broadcast_to(m_blk, mrun_ref.shape))
+
+    @pl.when(ph == 1)
+    def _():
+        m = mrun_ref[:, :1]                                 # exact global max
+        if use_lut:
+            p = _lut_exp_block(sg - m_g[..., None], ab_ref, LUT_LO, LUT_HI)
+            r = _lut_exp_block(m_g - m, ab_ref, LUT_LO, LUT_HI)
+        else:
+            p = jnp.exp(sg - m_g[..., None])
+            r = jnp.exp(m_g - m)
+        s_g = jnp.sum(p, axis=-1)                           # (G, nb)
+        den = jnp.sum(s_g * r, axis=-1, keepdims=True)
+        den_ref[...] = den_ref[...] + jnp.broadcast_to(den, den_ref.shape)
+        pr = (p * r[..., None]).reshape(gq, bs)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)           # (bs, D)
+        acc_ref[...] = acc_ref[...] + jnp.dot(
+            pr, v, preferred_element_type=jnp.float32)
+
+    @pl.when((ph == 1) & (ji == nb_max - 1))
+    def _():
+        den = jnp.maximum(den_ref[:, :1], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / den).astype(o_ref.dtype)
+
+
+def paged_attention_decode(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, block_tables: jax.Array,
+                           lengths: jax.Array, *, group_size: int = 64,
+                           use_lut: bool = True,
+                           scale: Optional[float] = None,
+                           window: Optional[int] = None,
+                           interpret: bool = False) -> jax.Array:
+    """q (B, H, D) single decode query per request; k_pool/v_pool
+    (NB, BS, Hkv, D) shared block pools; block_tables (B, NBMAX) int32
+    pool-block ids per logical block (pad with 0 — the null block);
+    lengths (B,) or (B, 1) int32 valid token counts. Returns (B, H, D).
+    The softmax group is capped at BS (see module docstring)."""
+    B, H, D = q.shape
+    NB, BS, Hkv = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    G = H // Hkv
+    nbmax = block_tables.shape[1]
+    g = min(group_size, BS)
+    assert BS % g == 0, (BS, g)
+    scale = scale if scale is not None else D ** -0.5
+
+    qg = q.reshape(B, Hkv, G, D)
+    bt = block_tables.astype(jnp.int32)
+    len2 = lengths.reshape(B, 1).astype(jnp.int32)
+    a, b = build_exp_lut()
+    ab = jnp.stack([a, b], axis=1)
+
+    kern = functools.partial(_kernel, scale=scale, group=g, use_lut=use_lut,
+                             window=window, bs=BS, gq=G)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B * Hkv, 2, nbmax),             # (bh, phase, logical block)
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D),
+                         lambda bh, ph, ji, bt: (bh // Hkv, bh % Hkv, 0, 0)),
+            pl.BlockSpec((1, BS, 1, D),
+                         lambda bh, ph, ji, bt: (bt[bh // Hkv, ji], 0,
+                                                 bh % Hkv, 0)),
+            pl.BlockSpec((1, BS, 1, D),
+                         lambda bh, ph, ji, bt: (bt[bh // Hkv, ji], 0,
+                                                 bh % Hkv, 0)),
+            pl.BlockSpec((1, 1), lambda bh, ph, ji, bt: (bh // Hkv, 0)),
+            pl.BlockSpec((LUT_SEGMENTS, 2), lambda bh, ph, ji, bt: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, G, D),
+            lambda bh, ph, ji, bt: (bh // Hkv, bh % Hkv, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 128), jnp.float32),   # running max (lane-bcast)
+            pltpu.VMEM((G, 128), jnp.float32),   # denominator
+            pltpu.VMEM((G, D), jnp.float32),     # PV accumulator
+        ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(bt, qg, k_pool, v_pool, len2, ab)
+    return out.reshape(B, H, D)

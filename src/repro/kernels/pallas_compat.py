@@ -19,6 +19,7 @@ VMEM = pltpu.VMEM
 SMEM = pltpu.SMEM
 SemaphoreType = pltpu.SemaphoreType
 make_async_copy = pltpu.make_async_copy
+PrefetchScalarGridSpec = pltpu.PrefetchScalarGridSpec
 
 __all__ = ["CompilerParams", "MemorySpace", "VMEM", "SMEM",
-           "SemaphoreType", "make_async_copy"]
+           "SemaphoreType", "make_async_copy", "PrefetchScalarGridSpec"]

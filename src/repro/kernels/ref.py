@@ -115,6 +115,38 @@ def attention_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.reshape(B, H, D).astype(q.dtype)
 
 
+def gather_paged_kv_ref(pool: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """Assemble the dense per-request KV view from a block pool.
+    pool (NB, BS, Hkv, D); block_tables (B, NBMAX) int32 pool-block ids
+    (0 = the reserved null block) → (B, NBMAX·BS, Hkv, D). Positions past
+    a request's length read null/stale blocks — callers mask by length."""
+    NB, BS = pool.shape[0], pool.shape[1]
+    B, nbmax = block_tables.shape
+    flat_idx = (block_tables.astype(jnp.int32)[:, :, None] * BS
+                + jnp.arange(BS, dtype=jnp.int32)[None, None, :])
+    flat_idx = flat_idx.reshape(B, nbmax * BS)
+    return pool.reshape((NB * BS,) + pool.shape[2:])[flat_idx]
+
+
+def paged_attention_decode_ref(q: jax.Array, k_pool: jax.Array,
+                               v_pool: jax.Array, block_tables: jax.Array,
+                               lengths: jax.Array, *, group_size: int = 64,
+                               use_lut: bool = True,
+                               scale: Optional[float] = None,
+                               window: Optional[int] = None) -> jax.Array:
+    """Oracle for the paged fused decode kernel: gather the block pool
+    through the table into the dense cache layout, then run the dense
+    decode composition. With the virtual length NBMAX·BS equal to the
+    dense max_len this is *bit-identical* to the dense decode path —
+    invalid positions are masked to the same -1e30 before the softmax.
+    The kernel caps its softmax group at the block size; pass the same
+    effective group here when checking LUT-mode equivalence."""
+    kg = gather_paged_kv_ref(k_pool, block_tables)
+    vg = gather_paged_kv_ref(v_pool, block_tables)
+    return attention_decode_ref(q, kg, vg, lengths, group_size=group_size,
+                                use_lut=use_lut, scale=scale, window=window)
+
+
 def group_softmax_ref(x: jax.Array, group_size: int = 64,
                       use_lut: bool = True) -> jax.Array:
     return fusion.group_softmax(x, group_size=group_size, use_lut=use_lut)
@@ -188,10 +220,16 @@ def flash_attention_scan_ref(q: jax.Array, k: jax.Array, v: jax.Array,
 
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                   causal: bool = True, window: Optional[int] = None,
-                  use_lut: bool = False, scale: Optional[float] = None) -> jax.Array:
+                  use_lut: bool = False, scale: Optional[float] = None,
+                  q_offset: Optional[jax.Array] = None) -> jax.Array:
     """Exact (materialized-scores) attention. q (B,H,Sq,D); k/v (B,Hkv,Sk,D)
     with Hkv | H (GQA). ``window``: local attention half-width (keys with
-    qpos - kpos >= window masked)."""
+    qpos - kpos >= window masked). ``q_offset`` (B,) int32: absolute
+    position of the first query row (chunked prefill over a longer cached
+    prefix — queries at q_offset+i, keys at 0..Sk-1); default keeps the
+    classic suffix alignment qpos = arange(Sq) + (Sk - Sq). With
+    q_offset, causal masking alone bounds validity: the newest query IS
+    the newest written key, so no separate kv_len mask is needed."""
     B, H, Sq, D = q.shape
     Hkv, Sk = k.shape[1], k.shape[2]
     if Hkv != H:
@@ -201,13 +239,21 @@ def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     s = scale if scale is not None else D ** -0.5
     logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
                         k.astype(jnp.float32)) * s
-    qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)
     kpos = jnp.arange(Sk)[None, :]
-    mask = jnp.ones((Sq, Sk), bool)
+    if q_offset is not None:
+        assert causal, "q_offset requires causal masking for validity"
+        qpos = q_offset.reshape(B)[:, None, None] + jnp.arange(Sq)[:, None]
+        kpos = kpos[None]                       # (B, Sq, Sk) broadcasting
+        mask = jnp.ones((B, Sq, Sk), bool)
+    else:
+        qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)
+        mask = jnp.ones((Sq, Sk), bool)
     if causal:
         mask &= kpos <= qpos
     if window is not None:
         mask &= kpos > qpos - window
+    if q_offset is not None:
+        mask = mask[:, None]                    # (B, 1, Sq, Sk)
     logits = jnp.where(mask, logits, -jnp.inf)
     if use_lut:
         m = jnp.max(logits, axis=-1, keepdims=True)

@@ -8,7 +8,7 @@ three canonical step functions the launcher/trainer/server jit:
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -69,7 +69,14 @@ def loss_fn(params: Dict, cfg: ModelConfig, batch: Dict) -> jax.Array:
     return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+               num_blocks: Optional[int] = None, block_size: int = 16):
+    """Dense (L, B, S, …) cache by default; with ``num_blocks`` set, the
+    paged block-pool layout (pool + per-request block tables, DESIGN.md
+    §10) for the attention families that support it."""
+    if num_blocks is not None:
+        return family(cfg).init_paged_cache(cfg, batch, num_blocks,
+                                            block_size, max_len)
     return family(cfg).init_cache(cfg, batch, max_len)
 
 
@@ -83,6 +90,15 @@ def prefill_step(params: Dict, cfg: ModelConfig, batch: Dict,
         return m.prefill(params, cfg, batch["tokens"], cache,
                          batch.get("vision_embeds"), batch.get("positions"))
     return m.prefill(params, cfg, batch["tokens"], cache)
+
+
+def prefill_chunk_step(params: Dict, cfg: ModelConfig, batch: Dict,
+                       cache, start: jax.Array) -> Tuple[jax.Array, object]:
+    """One chunked-prefill step into a paged cache: batch["tokens"]
+    (B, C) written at absolute positions ``start`` (B,). Returns
+    full-chunk logits (B, C, V) and the updated cache."""
+    return family(cfg).prefill_chunk(params, cfg, batch["tokens"], cache,
+                                     start)
 
 
 def serve_step(params: Dict, cfg: ModelConfig, token: jax.Array, cache,

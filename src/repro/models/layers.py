@@ -224,6 +224,52 @@ def _per_slot(idx) -> bool:
     return hasattr(idx, "ndim") and idx.ndim == 1
 
 
+def is_paged_cache(cache) -> bool:
+    """A paged per-layer cache carries the block table alongside the
+    pools: {"k": (NB, BS, Hkv, D), "v": ..., "bt": (B, NBMAX)}. The dense
+    layout keeps {"k": (B, S, Hkv, D), "v": ...} (DESIGN.md §10)."""
+    return isinstance(cache, dict) and "bt" in cache
+
+
+def write_kv_cache_paged(cache: Dict, k: jax.Array, v: jax.Array,
+                         start) -> Dict:
+    """Scatter this step's K/V (B, S, Hkv, D) into the block pool at
+    logical positions start..start+S-1 per request (start (B,) or scalar).
+    Logical position p lives at pool block ``bt[b, p // BS]``, slot
+    ``p % BS``. Unallocated table entries are 0 — the reserved null
+    block — so inactive slots and chunk padding write harmlessly there
+    (reads are masked by length / causality)."""
+    pool_k, pool_v, bt = cache["k"], cache["v"], cache["bt"]
+    NB, BS = pool_k.shape[0], pool_k.shape[1]
+    B, S = k.shape[:2]
+    if not _per_slot(start):
+        start = jnp.full((B,), start, jnp.int32)
+    p = start[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]   # (B, S)
+    bidx = p // BS
+    blk = jnp.take_along_axis(bt.astype(jnp.int32),
+                              jnp.clip(bidx, 0, bt.shape[1] - 1), axis=1)
+    # positions past the table (final-chunk padding crossing max_len) go
+    # to the null block — NOT clipped onto the last live block, where the
+    # duplicate-index scatter (last-wins) would overwrite real tokens
+    blk = jnp.where(bidx >= bt.shape[1], 0, blk)
+    flat = (blk * BS + p % BS).reshape(-1)
+    tail = pool_k.shape[2:]
+    new_k = pool_k.reshape((NB * BS,) + tail).at[flat].set(
+        k.reshape((B * S,) + tail).astype(pool_k.dtype)).reshape(pool_k.shape)
+    new_v = pool_v.reshape((NB * BS,) + tail).at[flat].set(
+        v.reshape((B * S,) + tail).astype(pool_v.dtype)).reshape(pool_v.shape)
+    return {"k": new_k, "v": new_v, "bt": bt}
+
+
+def gather_paged_kv(cache: Dict) -> Tuple[jax.Array, jax.Array]:
+    """Dense (B, NBMAX·BS, Hkv, D) K/V views assembled through the block
+    table (chunked prefill reads the whole prefix this way; decode uses
+    the gathering kernel instead)."""
+    from repro.kernels.ref import gather_paged_kv_ref
+    return (gather_paged_kv_ref(cache["k"], cache["bt"]),
+            gather_paged_kv_ref(cache["v"], cache["bt"]))
+
+
 def write_kv_cache(cache: Dict, k: jax.Array, v: jax.Array,
                    cache_index) -> Dict:
     """Write this step's K/V (B, S, Hkv, D) into the cache at
@@ -264,7 +310,34 @@ def apply_attention(p: Dict, cfg: ModelConfig, x: jax.Array,
         k = apply_rope(k, pos, cfg)
 
     new_cache = cache
-    if cache is not None and kv_x is None:
+    if cache is not None and kv_x is None and is_paged_cache(cache):
+        # paged KV (DESIGN.md §10): positions map to pool blocks through
+        # the per-request block table; cache_index is the (B,) start
+        # position of this step's writes
+        new_cache = write_kv_cache_paged(cache, k, v, cache_index)
+        idx = cache_index if _per_slot(cache_index) \
+            else jnp.full((B,), cache_index, jnp.int32)
+        if S == 1:
+            # decode: always the fused gathering dispatch (kernel on TPU,
+            # gather + dense decode composition — bit-identical to the
+            # dense unfused branch — elsewhere)
+            out = ops.paged_attention_decode(
+                q[:, 0], new_cache["k"], new_cache["v"], new_cache["bt"],
+                idx + 1, group_size=cfg.softmax_group,
+                use_lut=cfg.use_lut_softmax, window=window)
+            out = out[:, :, None, :]             # (B, H, q=1, D)
+        else:
+            # chunked prefill: attend the chunk's queries (absolute
+            # positions idx..idx+S-1) over the gathered written prefix;
+            # causal masking at the absolute offset bounds validity
+            kg, vg = gather_paged_kv(new_cache)
+            out = ops.attention(jnp.swapaxes(q, 1, 2),
+                                jnp.swapaxes(kg, 1, 2),
+                                jnp.swapaxes(vg, 1, 2),
+                                causal=True, window=window,
+                                use_lut=cfg.use_lut_softmax, q_offset=idx)
+        out = jnp.swapaxes(out, 1, 2).astype(x.dtype)
+    elif cache is not None and kv_x is None:
         new_cache = write_kv_cache(cache, k, v, cache_index)
         idx = cache_index
         per_slot = _per_slot(idx)
@@ -347,6 +420,19 @@ def make_attn_cache(cfg: ModelConfig, batch: int, max_len: int,
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
+def make_paged_attn_cache(cfg: ModelConfig, batch: int, num_blocks: int,
+                          block_size: int, max_len: int,
+                          dtype=jnp.bfloat16) -> Dict:
+    """One layer's paged cache: shared K/V pools of ``num_blocks`` blocks
+    of ``block_size`` tokens (block 0 reserved as the null block) plus a
+    per-request block table sized for max_len tokens."""
+    assert max_len % block_size == 0, (max_len, block_size)
+    nbmax = max_len // block_size
+    shape = (num_blocks, block_size, cfg.num_kv_heads, cfg.head_dim_)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "bt": jnp.zeros((batch, nbmax), jnp.int32)}
+
+
 # ---------------------------------------------------------------------------
 # MLP
 # ---------------------------------------------------------------------------
@@ -426,15 +512,21 @@ def apply_decoder_layer_fused(lp: Dict, cfg: ModelConfig, x: jax.Array,
     if cfg.rope_style != "none":
         q = apply_rope(q, pos, cfg)
         k = apply_rope(k, pos, cfg)
-    new_cache = write_kv_cache(cache, k, v, cache_index)
-
     idx = cache_index
     lengths = (idx + 1) if _per_slot(idx) \
         else jnp.full((B,), idx + 1, jnp.int32)
-    attn = ops.attention_decode(
-        q[:, 0], new_cache["k"], new_cache["v"], lengths,
-        group_size=cfg.softmax_group, use_lut=cfg.use_lut_softmax,
-        window=window)
+    if is_paged_cache(cache):
+        new_cache = write_kv_cache_paged(cache, k, v, cache_index)
+        attn = ops.paged_attention_decode(
+            q[:, 0], new_cache["k"], new_cache["v"], new_cache["bt"],
+            lengths, group_size=cfg.softmax_group,
+            use_lut=cfg.use_lut_softmax, window=window)
+    else:
+        new_cache = write_kv_cache(cache, k, v, cache_index)
+        attn = ops.attention_decode(
+            q[:, 0], new_cache["k"], new_cache["v"], lengths,
+            group_size=cfg.softmax_group, use_lut=cfg.use_lut_softmax,
+            window=window)
     attn2 = attn.reshape(B, H * D).astype(x.dtype)
     x1 = _fused_linear(lp["attn"]["wo"], attn2,
                        residual=x2).astype(x.dtype)     # + residual, fused

@@ -199,6 +199,7 @@ def forward(params, cfg, tokens):
 
 
 init_cache = T.init_cache
+init_paged_cache = T.init_paged_cache
 cache_axes = T.cache_axes
 
 
@@ -209,6 +210,19 @@ def prefill(params, cfg, tokens, cache):
     x, cache = _run_layers(params, cfg, x, pos, cache, 0)
     x = L.apply_norm(params["ln_f"], x, cfg)
     return L.lm_logits(params["embed"], x[:, -1], cfg), cache
+
+
+def prefill_chunk(params, cfg, tokens, cache, start):
+    """Chunked paged prefill (see transformer.prefill_chunk). NOTE:
+    GShard capacity competition is grouping-dependent — chunked prefill
+    is token-exact versus whole-prompt prefill only while the expert
+    capacity never binds (DESIGN.md §10)."""
+    B, C = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, cfg.dtype)
+    pos = start.reshape(B)[:, None] + jnp.arange(C, dtype=jnp.int32)[None]
+    x, cache = _run_layers(params, cfg, x, pos, cache, start.reshape(B))
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    return L.lm_logits(params["embed"], x, cfg), cache
 
 
 def decode_step(params, cfg, token, cache, pos_idx):

@@ -111,6 +111,18 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
         lambda a: jnp.zeros((cfg.num_layers,) + a.shape, a.dtype), one)
 
 
+def init_paged_cache(cfg: ModelConfig, batch: int, num_blocks: int,
+                     block_size: int, max_len: int) -> Dict:
+    """Block-pool KV cache (DESIGN.md §10): per-layer shared pools
+    (L, NB, BS, Hkv, D) plus per-request block tables (L, B, NBMAX) —
+    the table is identical across layers (one logical table broadcast so
+    the layer scan can thread it like any other cache leaf)."""
+    one = L.make_paged_attn_cache(cfg, batch, num_blocks, block_size,
+                                  max_len, dtype=cfg.dtype)
+    return jax.tree.map(
+        lambda a: jnp.zeros((cfg.num_layers,) + a.shape, a.dtype), one)
+
+
 def prefill(params: Dict, cfg: ModelConfig, tokens: jax.Array,
             cache: Dict) -> Tuple[jax.Array, Dict]:
     """Run the prompt through the model, filling the cache from position 0.
@@ -121,6 +133,22 @@ def prefill(params: Dict, cfg: ModelConfig, tokens: jax.Array,
     x, cache = _run_layers(params, cfg, x, pos, cache, 0)
     x = L.apply_norm(params["ln_f"], x, cfg)
     return L.lm_logits(params["embed"], x[:, -1], cfg), cache
+
+
+def prefill_chunk(params: Dict, cfg: ModelConfig, tokens: jax.Array,
+                  cache: Dict, start: jax.Array) -> Tuple[jax.Array, Dict]:
+    """Chunked prefill into a paged cache: tokens (B, C) occupy absolute
+    positions start..start+C-1 (start (B,) int32); each chunk attends
+    over the previously written prefix through the block table. Returns
+    FULL-chunk logits (B, C, V) — the scheduler reads the row of the
+    last real prompt token, so chunk padding needs no re-decode hack —
+    and the updated cache."""
+    B, C = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, cfg.dtype)
+    pos = start.reshape(B)[:, None] + jnp.arange(C, dtype=jnp.int32)[None]
+    x, cache = _run_layers(params, cfg, x, pos, cache, start.reshape(B))
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    return L.lm_logits(params["embed"], x, cfg), cache
 
 
 def decode_step(params: Dict, cfg: ModelConfig, token: jax.Array,

@@ -21,6 +21,7 @@ build = T.build
 init = T.init
 axes = T.axes
 init_cache = T.init_cache
+init_paged_cache = T.init_paged_cache
 cache_axes = T.cache_axes
 
 
@@ -65,6 +66,20 @@ def prefill(params: Dict, cfg: ModelConfig, tokens: jax.Array, cache: Dict,
     x, cache = T._run_layers(params, cfg, x, pos, cache, 0)
     x = L.apply_norm(params["ln_f"], x, cfg)
     return L.lm_logits(params["embed"], x[:, -1], cfg), cache
+
+
+def prefill_chunk(params: Dict, cfg: ModelConfig, tokens: jax.Array,
+                  cache: Dict, start: jax.Array) -> Tuple[jax.Array, Dict]:
+    """Chunked paged prefill, text-only (the stubbed vision prefix is a
+    ROADMAP follow-on for paged serving): identical t/h/w M-RoPE streams
+    starting at each request's absolute offset."""
+    B, C = tokens.shape
+    x = L.embed_tokens(params["embed"], tokens, cfg.dtype)
+    p = start.reshape(B)[:, None] + jnp.arange(C, dtype=jnp.int32)[None]
+    pos = jnp.broadcast_to(p[None], (3, B, C))
+    x, cache = T._run_layers(params, cfg, x, pos, cache, start.reshape(B))
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    return L.lm_logits(params["embed"], x, cfg), cache
 
 
 def decode_step(params: Dict, cfg: ModelConfig, token: jax.Array,

@@ -62,6 +62,7 @@ class ContinuousBatcher:
         self.queue: List[Request] = []
         self.done: Dict[int, List[int]] = {}
         self.tokens = jnp.zeros((slots, 1), jnp.int32)
+        self._req_eos: Dict[int, Optional[int]] = {}
 
         self._decode = jax.jit(
             lambda p, t, c, i: api.serve_step(p, cfg, t, c, i))
@@ -107,28 +108,25 @@ class ContinuousBatcher:
             logits, cache1 = self._prefill_fn(bucket)(
                 self.params, jnp.asarray(toks), cache1)
             # bucket padding wrote junk K/V beyond n — harmless: the
-            # per-slot validity mask stops at slot.pos
+            # per-slot validity mask stops at slot.pos (asserted by the
+            # cache-poisoning test in tests/test_batching.py)
             # copy the slot cache slice in (batch dim = 1 in cache1)
             self.cache = jax.tree.map(
                 lambda big, one: jax.lax.dynamic_update_slice_in_dim(
                     big, one.astype(big.dtype), si, self._batch_axis(big)),
                 self.cache, cache1)
-            # first generated token: logits at the last REAL prompt pos is
-            # only exact for n == bucket; re-decode the last prompt token
-            # for exactness when padded
-            slot.rid, slot.pos, slot.out = req.rid, n, []
+            # ONE exact first-token path for every prompt length: the
+            # bucket-padded prefill logits row is only exact when
+            # n == bucket, so the first generated token always comes from
+            # re-decoding the last prompt token at position n-1 (its K/V
+            # write recomputes identical values; prefill logits unused)
+            slot.rid, slot.out = req.rid, []
             slot.remaining = req.max_new
-            self._req_eos = getattr(self, "_req_eos", {})
             self._req_eos[req.rid] = req.eos
-            if n == bucket:
-                first = int(jnp.argmax(logits[0]))
-                self._emit(si, first)
-            else:
-                # exact path: decode position n-1 with the real last token
-                slot.pos = n - 1
-                tok = np.array(self.tokens)
-                tok[si, 0] = req.prompt[-1]
-                self.tokens = jnp.asarray(tok)
+            slot.pos = n - 1
+            tok = np.array(self.tokens)
+            tok[si, 0] = req.prompt[-1]
+            self.tokens = jnp.asarray(tok)
 
     def _batch_axis(self, leaf) -> int:
         # cache leaves are (L, B, ...) — batch axis 1
@@ -149,7 +147,7 @@ class ContinuousBatcher:
         slot = self.slots[si]
         slot.out.append(tok)
         slot.remaining -= 1
-        eos = getattr(self, "_req_eos", {}).get(slot.rid)
+        eos = self._req_eos.get(slot.rid)
         if slot.remaining <= 0 or (eos is not None and tok == eos):
             self.done[slot.rid] = slot.out
             self.slots[si] = _Slot()

@@ -1,0 +1,8 @@
+"""Paged-KV serving subsystem (DESIGN.md §10): a ref-counted block pool
+with hash-based prefix sharing, and a chunked-prefill scheduler that
+replaces the dense per-slot cache of ``serve.batching`` with block-table
+indirection through the paged fused decode kernel."""
+from repro.serve.paged.block_pool import KVBlockPool, prefix_hashes
+from repro.serve.paged.scheduler import Scheduler
+
+__all__ = ["KVBlockPool", "Scheduler", "prefix_hashes"]

@@ -1,0 +1,134 @@
+"""Host-side KV block-pool bookkeeping (DESIGN.md §10).
+
+The pool owns the physical block ids of the jit-side K/V pools
+(``models.layers.make_paged_attn_cache``). Block 0 is the reserved
+*null* block: unallocated block-table entries point at it, so inactive
+decode slots and chunk padding write there harmlessly and masked reads
+never observe it.
+
+Prefix sharing is hash-based, vLLM style: a *full* block holding prompt
+tokens is registered under the rolling hash of the entire token prefix
+up to and including that block, so any request whose prompt starts with
+the same tokens maps the block into its table (ref-counted — stored
+once, shared by all). Blocks whose refcount drops to zero but that
+carry a prefix hash stay *cached*: they keep their contents and remain
+reusable until the allocator evicts them LRU-first when the free list
+runs dry. Unhashed blocks (decode-generated tokens, partial prompt
+tails) return straight to the free list.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict, deque
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+def prefix_hashes(tokens: Sequence[int], block_size: int) -> List[int]:
+    """Rolling prefix hash per FULL block: entry i covers
+    tokens[0:(i+1)·block_size]. Only full blocks are hashable — a
+    partial tail block's contents still change as the prompt grows."""
+    out, h = [], None
+    for i in range(len(tokens) // block_size):
+        blk = tuple(tokens[i * block_size:(i + 1) * block_size])
+        h = hash((h, blk))
+        out.append(h)
+    return out
+
+
+class KVBlockPool:
+    """Allocator for ``num_blocks`` physical blocks of ``block_size``
+    tokens. Thread-unsafe by design (the scheduler is a single loop)."""
+
+    def __init__(self, num_blocks: int, block_size: int):
+        assert num_blocks >= 2, "need at least the null block + one"
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._free: deque = deque(range(1, num_blocks))   # 0 = null block
+        self._ref: Dict[int, int] = {}
+        self._hash_to_block: Dict[int, int] = {}
+        self._block_hash: Dict[int, int] = {}
+        self._cached: "OrderedDict[int, None]" = OrderedDict()  # LRU, ref==0
+        self.peak_in_use = 0
+
+    # -- accounting ------------------------------------------------------
+    @property
+    def blocks_in_use(self) -> int:
+        """Blocks referenced by at least one live request."""
+        return len(self._ref)
+
+    @property
+    def num_free(self) -> int:
+        """Blocks allocatable right now (free list + evictable cached)."""
+        return len(self._free) + len(self._cached)
+
+    def _note_usage(self) -> None:
+        self.peak_in_use = max(self.peak_in_use, self.blocks_in_use)
+
+    # -- allocation ------------------------------------------------------
+    def alloc(self) -> Optional[int]:
+        """Allocate a fresh (or LRU-evicted cached) block with refcount 1.
+        Returns None when the pool is exhausted (caller preempts)."""
+        if self._free:
+            bid = self._free.popleft()
+        elif self._cached:
+            bid, _ = self._cached.popitem(last=False)     # LRU eviction
+            h = self._block_hash.pop(bid)
+            del self._hash_to_block[h]
+        else:
+            return None
+        self._ref[bid] = 1
+        self._note_usage()
+        return bid
+
+    def retain(self, bid: int) -> None:
+        """Add a reference (prefix reuse or an extra holder)."""
+        if bid in self._ref:
+            self._ref[bid] += 1
+            return
+        # reviving a cached (ref==0) block
+        del self._cached[bid]
+        self._ref[bid] = 1
+        self._note_usage()
+
+    def release(self, bid: int) -> None:
+        """Drop one reference; at zero the block becomes evictable-cached
+        (if prefix-hashed) or immediately free."""
+        n = self._ref[bid] - 1
+        if n > 0:
+            self._ref[bid] = n
+            return
+        del self._ref[bid]
+        if bid in self._block_hash:
+            self._cached[bid] = None
+            self._cached.move_to_end(bid)
+        else:
+            self._free.append(bid)
+
+    # -- prefix cache ----------------------------------------------------
+    def is_cached(self, bid: int) -> bool:
+        """True for a refcount-0 hashed block (allocatable via eviction —
+        counted in num_free — but consumed from it when retained)."""
+        return bid in self._cached
+
+    def lookup_prefix(self, h: int) -> Optional[int]:
+        return self._hash_to_block.get(h)
+
+    def register_prefix(self, bid: int, h: int) -> None:
+        """Publish a live block under its prefix hash. First writer wins:
+        if the hash is already mapped (a concurrent request computed the
+        same prefix), the existing mapping is kept and this block simply
+        stays unhashed (it frees normally)."""
+        if h in self._hash_to_block or bid in self._block_hash:
+            return
+        self._hash_to_block[h] = bid
+        self._block_hash[bid] = h
+
+    def match_prefix(self, tokens: Sequence[int]) -> List[int]:
+        """Longest chain of cached blocks covering the prompt's full
+        blocks, in logical order (stops at the first miss)."""
+        out = []
+        for h in prefix_hashes(tokens, self.block_size):
+            bid = self.lookup_prefix(h)
+            if bid is None:
+                break
+            out.append(bid)
+        return out

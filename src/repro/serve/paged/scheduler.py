@@ -1,0 +1,322 @@
+"""Paged-KV continuous-batching scheduler (DESIGN.md §10).
+
+Replaces the dense slot loop of ``serve.batching.ContinuousBatcher``:
+
+* **Admission by free-block budget** — a request is admitted when the
+  pool can cover its prompt blocks (minus any prefix-cache hits) plus
+  one block of decode headroom; admission is FIFO, no head-of-line skip.
+* **Chunked prefill** — prompts stream into the pool ``chunk`` tokens
+  per tick, interleaved with decode ticks of the already-running slots,
+  through one fixed-shape jitted chunk step (the last chunk is padded;
+  the first generated token is read from the last *real* row of the
+  full-chunk logits, so there is no power-of-two bucket padding and no
+  re-decode-the-last-prompt-token hack).
+* **Prefix sharing** — full prompt blocks are content-hashed; a new
+  request retains matching cached blocks instead of recomputing them
+  (capped at (n-1)//BS blocks so the block holding the last prompt
+  token — whose logits seed decode — is always privately recomputed and
+  shared blocks are never written).
+* **Preemption by eviction** — when the pool runs dry mid-decode the
+  youngest running request is evicted (blocks released, request
+  re-queued at the front); greedy decoding makes the later re-run
+  token-identical, so preemption trades recompute for memory, never
+  correctness.
+
+Exactness: every tick runs the same model step functions as the dense
+engine over the same masked shapes (virtual length NBMAX·BS == the
+dense engine's max_len), so greedy outputs are token-identical to
+``Engine.generate`` — asserted across dense/MoE/VLM in
+tests/test_paged.py. Caveat: on the Pallas kernel path (TPU /
+force_pallas) with ``use_lut_softmax=True`` the paged kernel caps the
+softmax group at the block size while the dense kernel uses
+``cfg.softmax_group``; LUT grouping is numerics-visible, so kernel-path
+LUT serving agrees with the dense engine only to LUT tolerance, not
+token-identically (exact-exp mode and the off-TPU ref path are
+unaffected — DESIGN.md §10).
+
+The per-tick decode-active counts feed the WS-OCS weight-stream
+amortization model (``sim.perf_model.scheduler_amortization_report``):
+the RCW-bound weight stream is paid once per tick and divided by the
+number of active decode slots — the denominator this subsystem exists
+to keep high.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from collections import deque
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+from repro.serve.batching import Request
+from repro.serve.paged.block_pool import KVBlockPool, prefix_hashes
+
+
+@dataclasses.dataclass
+class _Entry:
+    """Queue entry: the request plus tokens already emitted before a
+    preemption (greedy decode resumes exactly by prefilling them)."""
+    req: Request
+    pre_out: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def tokens(self) -> List[int]:
+        return list(self.req.prompt) + self.pre_out
+
+
+@dataclasses.dataclass
+class _Seq:
+    entry: _Entry
+    table: List[int]                  # physical block ids, logical order
+    n_shared: int                     # leading blocks retained from cache
+    pos: int                          # next cache write position
+    phase: str                        # "prefill" | "decode"
+    ticket: int                       # admission order (preemption prio)
+    out: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def rid(self) -> int:
+        return self.entry.req.rid
+
+    @property
+    def emitted(self) -> int:
+        return len(self.entry.pre_out) + len(self.out)
+
+
+class Scheduler:
+    """Drives dense/MoE/VLM decode over a paged KV pool. ``num_blocks``
+    includes the reserved null block; it must be at least
+    max_len//block_size + 2 so a lone request can always run."""
+
+    def __init__(self, cfg: ModelConfig, params, slots: int = 4,
+                 max_len: int = 512, block_size: int = 16,
+                 num_blocks: Optional[int] = None, chunk: int = 32,
+                 prefix_cache: bool = True):
+        assert cfg.family in ("dense", "moe", "vlm"), cfg.family
+        assert max_len % block_size == 0, (max_len, block_size)
+        self.cfg, self.params = cfg, params
+        self.n_slots, self.max_len = slots, max_len
+        self.block_size, self.chunk = block_size, chunk
+        self.nbmax = max_len // block_size
+        if num_blocks is None:                       # dense-equivalent
+            num_blocks = max(slots * self.nbmax + 1, self.nbmax + 2)
+        assert num_blocks >= self.nbmax + 2, \
+            f"pool too small: {num_blocks} < {self.nbmax + 2}"
+        self.pool = KVBlockPool(num_blocks, block_size)
+        self.prefix_cache = prefix_cache
+
+        cache = api.init_cache(cfg, slots, max_len, num_blocks=num_blocks,
+                               block_size=block_size)
+        self.kv = {"k": cache["k"], "v": cache["v"]}   # (L, NB, BS, Hkv, D)
+        self.num_layers = cache["k"].shape[0]
+
+        self.queue: Deque[_Entry] = deque()
+        self.slots: List[Optional[_Seq]] = [None] * slots
+        self.done: Dict[int, List[int]] = {}
+        self.tokens = np.zeros((slots, 1), np.int32)
+        self._ticket = 0
+        self.tick_active: List[int] = []         # decode slots per tick
+
+        self._decode = jax.jit(
+            lambda p, t, c, i: api.serve_step(p, cfg, t, c, i))
+        self._chunk = jax.jit(
+            lambda p, t, c, s: api.prefill_chunk_step(
+                p, cfg, {"tokens": t}, c, s))
+
+    # -- public API ------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        n = len(req.prompt)
+        assert n >= 1 and n + req.max_new - 1 <= self.max_len, \
+            (n, req.max_new, self.max_len)
+        self.queue.append(_Entry(req))
+
+    def run(self, max_ticks: int = 100_000) -> Dict[int, List[int]]:
+        """Drive until queue and slots drain; returns rid → generated."""
+        for _ in range(max_ticks):
+            active = any(s is not None for s in self.slots)
+            if not active and not self.queue:
+                break
+            self._admit()
+            self._prefill_tick()
+            self._grow_or_preempt()
+            self._decode_tick()
+        return self.done
+
+    # -- memory accounting ----------------------------------------------
+    def _block_bytes(self) -> int:
+        k = self.kv["k"]          # (L, NB, BS, Hkv, D)
+        per_tok = int(np.prod(k.shape[3:])) * k.dtype.itemsize
+        return 2 * self.num_layers * self.block_size * per_tok   # K + V
+
+    def kv_bytes_peak(self) -> int:
+        """Peak bytes of *referenced* KV blocks across the run."""
+        return self.pool.peak_in_use * self._block_bytes()
+
+    def kv_bytes_dense_equiv(self) -> int:
+        """What the dense per-slot layout would have allocated."""
+        return self.n_slots * self.nbmax * self._block_bytes()
+
+    def stream_amortization_report(self) -> Dict[str, float]:
+        from repro.sim.perf_model import scheduler_amortization_report
+        return scheduler_amortization_report(self.tick_active)
+
+    # -- admission -------------------------------------------------------
+    def _admit(self) -> None:
+        for si in range(self.n_slots):
+            if not self.queue:
+                return
+            if self.slots[si] is not None:
+                continue
+            entry = self.queue[0]
+            toks = entry.tokens
+            n = len(toks)
+            shared = self.pool.match_prefix(toks) if self.prefix_cache \
+                else []
+            # the block holding the last prompt token is always private:
+            # its logits row seeds decode and its tail keeps growing
+            shared = shared[:(n - 1) // self.block_size]
+            need = -(-n // self.block_size) - len(shared)
+            # shared blocks sitting in the prefix cache count in num_free
+            # (evictable) but retaining them consumes that allocatability
+            cached_shared = sum(self.pool.is_cached(b) for b in shared)
+            if self.pool.num_free - cached_shared < need + 1:  # +1 decode
+                return                            # FIFO: no queue skip
+            self.queue.popleft()
+            for bid in shared:
+                self.pool.retain(bid)
+            table = list(shared)
+            for _ in range(need):
+                bid = self.pool.alloc()
+                if bid is None:                   # accounting drift guard
+                    for b in table:
+                        self.pool.release(b)
+                    self.queue.appendleft(entry)
+                    return
+                table.append(bid)
+            self.slots[si] = _Seq(entry=entry, table=table,
+                                  n_shared=len(shared),
+                                  pos=len(shared) * self.block_size,
+                                  phase="prefill", ticket=self._ticket)
+            self._ticket += 1
+
+    # -- chunked prefill -------------------------------------------------
+    def _bt_row(self, seq: Optional[_Seq]) -> np.ndarray:
+        row = np.zeros(self.nbmax, np.int32)
+        if seq is not None:
+            row[:len(seq.table)] = seq.table
+        return row
+
+    def _layered_bt(self, bt: np.ndarray) -> jnp.ndarray:
+        """(B, NBMAX) → (L, B, NBMAX): one logical table broadcast over
+        the layer axis so the layer scan threads it (DESIGN.md §10)."""
+        return jnp.asarray(
+            np.broadcast_to(bt[None], (self.num_layers,) + bt.shape))
+
+    def _prefill_tick(self) -> None:
+        for si, seq in enumerate(self.slots):
+            if seq is None or seq.phase != "prefill":
+                continue
+            toks = seq.entry.tokens
+            n = len(toks)
+            take = min(self.chunk, n - seq.pos)
+            buf = np.zeros((1, self.chunk), np.int32)
+            buf[0, :take] = toks[seq.pos:seq.pos + take]
+            cache = {"k": self.kv["k"], "v": self.kv["v"],
+                     "bt": self._layered_bt(self._bt_row(seq)[None])}
+            logits, cache = self._chunk(
+                self.params, jnp.asarray(buf), cache,
+                jnp.asarray([seq.pos], jnp.int32))
+            self.kv = {"k": cache["k"], "v": cache["v"]}
+            seq.pos += take
+            if seq.pos < n:
+                continue
+            # prompt complete: publish full-block prefix hashes and seed
+            # decode with the last REAL row of the chunk logits
+            if self.prefix_cache:
+                hashes = prefix_hashes(toks, self.block_size)
+                for i in range(seq.n_shared, n // self.block_size):
+                    self.pool.register_prefix(seq.table[i], hashes[i])
+            seq.phase = "decode"
+            seq.pos = n
+            first = int(jnp.argmax(logits[0, take - 1]))
+            self._emit(si, first)
+
+    # -- decode growth / preemption --------------------------------------
+    def _release_seq(self, seq: _Seq) -> None:
+        for bid in seq.table:
+            self.pool.release(bid)
+
+    def _preempt_youngest(self) -> bool:
+        """Evict the latest-admitted active request; False if there is
+        no other request to evict (pool genuinely exhausted)."""
+        cands = [(s.ticket, si) for si, s in enumerate(self.slots)
+                 if s is not None]
+        if len(cands) <= 1:
+            return False
+        _, si = max(cands)
+        seq = self.slots[si]
+        self._release_seq(seq)
+        self.queue.appendleft(
+            _Entry(seq.entry.req, seq.entry.pre_out + seq.out))
+        self.slots[si] = None
+        self.tokens[si, 0] = 0
+        return True
+
+    def _grow_or_preempt(self) -> None:
+        for si in range(self.n_slots):
+            seq = self.slots[si]
+            if seq is None or seq.phase != "decode":
+                continue
+            while seq.pos // self.block_size >= len(seq.table):
+                bid = self.pool.alloc()
+                if bid is not None:
+                    seq.table.append(bid)
+                    continue
+                if not self._preempt_youngest():
+                    raise RuntimeError(
+                        "KV pool exhausted with a single active request; "
+                        f"need num_blocks >= {self.nbmax + 2}")
+                seq = self.slots[si]      # the victim may be this slot
+                if seq is None or seq.phase != "decode":
+                    break
+
+    # -- decode ----------------------------------------------------------
+    def _decode_tick(self) -> None:
+        live = [si for si, s in enumerate(self.slots)
+                if s is not None and s.phase == "decode"]
+        if not live:
+            return
+        self.tick_active.append(len(live))
+        bt = np.zeros((self.n_slots, self.nbmax), np.int32)
+        pos = np.zeros(self.n_slots, np.int32)
+        for si in live:
+            bt[si] = self._bt_row(self.slots[si])
+            pos[si] = self.slots[si].pos
+        cache = {"k": self.kv["k"], "v": self.kv["v"],
+                 "bt": self._layered_bt(bt)}
+        logits, cache = self._decode(
+            self.params, jnp.asarray(self.tokens), cache,
+            jnp.asarray(pos, jnp.int32))
+        self.kv = {"k": cache["k"], "v": cache["v"]}
+        nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+        for si in live:
+            self.slots[si].pos += 1
+            self._emit(si, int(nxt[si]))
+
+    def _emit(self, si: int, tok: int) -> None:
+        seq = self.slots[si]
+        seq.out.append(tok)
+        req = seq.entry.req
+        if seq.emitted >= req.max_new or \
+                (req.eos is not None and tok == req.eos):
+            self.done[req.rid] = seq.entry.pre_out + seq.out
+            self._release_seq(seq)
+            self.slots[si] = None
+            self.tokens[si, 0] = 0
+        else:
+            self.tokens[si, 0] = tok

@@ -114,6 +114,55 @@ def decode_tokens_per_s(rcw: bool = True, fusion: bool = True,
 
 
 # ---------------------------------------------------------------------------
+# Batched-decode weight-stream amortization (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def amortized_decode_latency(n_active: int, rcw: bool = True,
+                             fusion: bool = True, ctx: int = 1024,
+                             chip: RCWCIMChip = RCWCIM,
+                             write_bw: float = None) -> float:
+    """Per-REQUEST decode latency when one weight stream serves
+    ``n_active`` concurrent requests. The RCW-bound stream term (DRAM
+    weight stream overlapped with the CIM update) is paid once per tick
+    regardless of batch size — continuous batching divides it across the
+    active slots — while MAC and nonlinear work scale per token. This is
+    the denominator the paged scheduler's admission/occupancy policy
+    maximizes (its per-tick active counts feed
+    ``scheduler_amortization_report``)."""
+    assert n_active >= 1, n_active
+    t_dram = t_dram_weights(chip)
+    t_upd = GEOM.weight_bytes() / (write_bw or CIM_WRITE_BW)
+    stream = max(t_dram, t_upd) if rcw else t_dram + t_upd
+    return stream / n_active + t_mac_per_token(chip) \
+        + t_nl_per_token(fusion, ctx, chip)
+
+
+def scheduler_amortization_report(active_counts, rcw: bool = True,
+                                  fusion: bool = True,
+                                  ctx: int = 1024) -> Dict[str, float]:
+    """Realized weight-stream amortization for a scheduler run.
+    ``active_counts`` is the per-decode-tick number of active slots
+    (``serve.paged.Scheduler.tick_active``). Returns the occupancy, the
+    modeled amortized throughput, and the speedup over serving the same
+    tokens at batch 1 (where every token pays the full stream)."""
+    counts = [int(c) for c in active_counts if c > 0]
+    if not counts:
+        return {"ticks": 0, "tokens": 0, "mean_active": 0.0,
+                "amortized_tokens_per_s": 0.0, "speedup_vs_b1": 1.0}
+    tokens = sum(counts)
+    total_t = sum(n * amortized_decode_latency(n, rcw, fusion, ctx)
+                  for n in counts)
+    b1 = decode_latency(rcw, fusion, ctx)
+    return {
+        "ticks": len(counts),
+        "tokens": tokens,
+        "mean_active": tokens / len(counts),
+        "amortized_tokens_per_s": tokens / total_t,
+        "speedup_vs_b1": (tokens * b1) / total_t,
+    }
+
+
+# ---------------------------------------------------------------------------
 # Prefill — Fig 9(a), Fig 8
 # ---------------------------------------------------------------------------
 

@@ -54,6 +54,38 @@ def test_eos_early_stop(setup):
     assert done[0] == ref[:3]
 
 
+def test_eos_tracking_is_a_constructor_field(setup):
+    cfg, params = setup
+    cb = ContinuousBatcher(cfg, params, slots=1, max_len=64)
+    assert cb._req_eos == {}          # proper field, not a getattr default
+    cb.submit(Request(rid=7, prompt=[1, 2, 3], max_new=2, eos=None))
+    cb.run()
+    assert 7 in cb._req_eos
+
+
+def test_unified_admit_path_masks_bucket_junk(setup):
+    """The single exact admission path (re-decode of the last prompt
+    token) must never read cache contents past slot.pos: poison every
+    cache position >= n with huge finite values right after _admit and
+    the outputs must still match Engine.generate — for both a
+    bucket-exact prompt (n == bucket) and a padded one (n < bucket)."""
+    cfg, params = setup
+    rng = np.random.default_rng(3)
+    for n in (8, 5):                  # bucket=8: exact and padded cases
+        prompt = rng.integers(1, cfg.vocab_size, size=n).tolist()
+        ref = _reference(cfg, params, prompt, 6)
+        cb = ContinuousBatcher(cfg, params, slots=1, max_len=64)
+        cb.submit(Request(rid=0, prompt=prompt, max_new=6))
+        cb._admit()
+        assert cb.slots[0].pos == n - 1          # one path for all n
+        poison = jax.tree.map(
+            lambda a: a.at[:, :, n:].set(jnp.asarray(1e6, a.dtype)),
+            cb.cache)
+        cb.cache = poison
+        done = cb.run()
+        assert done[0] == ref, (n, done[0], ref)
+
+
 def test_more_requests_than_slots_throughput(setup):
     cfg, params = setup
     rng = np.random.default_rng(1)

@@ -1,5 +1,6 @@
 """Tier-1 exercise of the benchmark perf rows: the smoke gate must run
-the PR 3 fused rows end-to-end and write BENCH_pr3.json."""
+the PR 3 fused rows and the PR 5 paged-serving rows end-to-end and
+write BENCH_pr3.json / BENCH_pr5.json."""
 import json
 import os
 import subprocess
@@ -11,7 +12,9 @@ ROOT = Path(__file__).resolve().parent.parent
 
 def test_bench_smoke_fast_rows(tmp_path):
     out = tmp_path / "BENCH_pr3.json"
-    env = dict(os.environ, PYTHONPATH="src", REPRO_BENCH_JSON=str(out))
+    out5 = tmp_path / "BENCH_pr5.json"
+    env = dict(os.environ, PYTHONPATH="src", REPRO_BENCH_JSON=str(out),
+               REPRO_BENCH_PR5_JSON=str(out5))
     proc = subprocess.run(
         [sys.executable, "benchmarks/smoke.py", "--fast"], cwd=ROOT,
         capture_output=True, text=True, timeout=560, env=env)
@@ -27,3 +30,10 @@ def test_bench_smoke_fast_rows(tmp_path):
     eq = {t: int(by[f"decode_dispatch_{t}"].split(";")[0].split("=")[1])
           for t in ("unfused", "fused")}
     assert eq["fused"] < eq["unfused"], eq
+    # PR 5 rows: paged serving must reference measurably fewer KV blocks
+    # than the dense slots × max_len allocation at both slot counts
+    rows5 = {r["name"]: dict(kv.split("=") for kv in r["derived"].split(";"))
+             for r in json.loads(out5.read_text())["rows"]}
+    for slots in (4, 16):
+        got = rows5[f"paged_paged_tok_s_slots{slots}"]
+        assert int(got["peak_kv_blocks"]) < int(got["dense_equiv_blocks"]), got
