@@ -3,7 +3,7 @@
 
 PY ?= python
 
-.PHONY: test bench bench-fast
+.PHONY: test bench bench-fast bench-prefill
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -13,3 +13,8 @@ bench:
 
 bench-fast:
 	PYTHONPATH=src $(PY) benchmarks/smoke.py --fast
+
+# PR 6 chunked-prefill rows only, written to the canonical BENCH_pr6.json
+bench-prefill:
+	PYTHONPATH=src:benchmarks $(PY) -c "import run; \
+	  run.run_benches([run.bench_prefill]); run.write_json(run.PR6_JSON)"

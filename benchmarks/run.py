@@ -37,6 +37,10 @@ BENCH_JSON = Path(os.environ.get(
 PR5_JSON = Path(os.environ.get(
     "REPRO_BENCH_PR5_JSON",
     Path(__file__).resolve().parent.parent / "BENCH_pr5.json"))
+# PR 6 rows (chunked-prefill kernelization) likewise
+PR6_JSON = Path(os.environ.get(
+    "REPRO_BENCH_PR6_JSON",
+    Path(__file__).resolve().parent.parent / "BENCH_pr6.json"))
 _ROWS = []
 
 
@@ -297,9 +301,197 @@ def bench_paged() -> None:
              f"speedup_vs_b1={amort['speedup_vs_b1']:.2f}x")
 
 
+def _env_arm(env):
+    """Context manager pinning the chunk-prefill dispatch switches."""
+    import contextlib
+
+    @contextlib.contextmanager
+    def cm():
+        keys = ("REPRO_CHUNK_ORACLE", "REPRO_OPT_PAGEDFLASH")
+        old = {k: os.environ.pop(k, None) for k in keys}
+        os.environ.update(env)
+        try:
+            yield
+        finally:
+            for k in keys:
+                os.environ.pop(k, None)
+            os.environ.update({k: v for k, v in old.items() if v is not None})
+    return cm()
+
+
+def bench_prefill() -> None:
+    """PR 6 rows (BENCH_pr6.json): chunked-prefill attention kernelized.
+
+    Three tiers of evidence (DESIGN.md §11):
+
+    * ``prefill_attn_*`` — op wall-time of one tick's chunk attention at
+      ``slots`` concurrent requests (B = slots): the PR 5 dense-oracle
+      (gather the pool dense, materialize (C, max_len) scores) vs the
+      offset-causal *flash* composition (still gathers dense, but
+      online-softmax over the written prefix only) vs *paged-flash*
+      (``ops.paged_flash_prefill``: block-table fetch, no dense copy —
+      the off-TPU O(written-prefix) scan lowering stands in for the
+      Pallas kernel this container cannot lower).
+    * ``prefill_sched_*`` — end-to-end Scheduler wall-clock on a pure
+      chunked-prefill workload (max_new=1: the first token comes from
+      the chunk logits, so no decode ticks), oracle arm
+      (REPRO_CHUNK_ORACLE=1) vs flash arm (REPRO_OPT_PAGEDFLASH=1), with
+      a right-sized pool (~2×nbmax blocks — the paged setting; a
+      dense-equivalent pool just measures pool-copy traffic). Greedy
+      outputs are asserted identical across arms.
+    * ``prefill_dispatch_*`` — ``Engine.prefill_eqn_count`` jaxpr
+      accounting of one chunk step, kernel path vs oracle: on the
+      kernel path attention + every layer matmul is Pallas-resident
+      (dense dot_generals == 1, the LM head) and the oracle's two
+      densify gathers per pool vanish — the "no dense KV on
+      prefix-cache hit" invariant, counted.
+    """
+    from repro.configs import get_config
+    from repro.models import api
+    from repro.serve.batching import Request
+    from repro.serve.engine import Engine, quantize_params
+    from repro.serve.paged import Scheduler
+
+    rng = np.random.default_rng(0)
+
+    # ---- op-level: one tick of chunk attention at B = slots ----------
+    Hkv, D, H, BS, C, NBMAX = 2, 32, 2, 16, 16, 256
+    NB = 2 * NBMAX + 2
+    kp = jnp.asarray(rng.standard_normal((NB, BS, Hkv, D)).astype(np.float32))
+    vp = jnp.asarray(rng.standard_normal((NB, BS, Hkv, D)).astype(np.float32))
+
+    def flash_dense(q, kp, vp, bt, st):
+        # offset-causal flash over the *densified* prefix: pay the PR 5
+        # gather, then view the dense copy as a per-request pool (identity
+        # table) and run the online-softmax scan — isolates densify cost
+        # (flash vs paged-flash) from materialized-score cost (oracle
+        # vs flash)
+        kg = ref.gather_paged_kv_ref(kp, bt)
+        vg = ref.gather_paged_kv_ref(vp, bt)
+        B, nbmax = bt.shape
+        ident = (jnp.arange(B, dtype=jnp.int32)[:, None] * nbmax
+                 + jnp.arange(nbmax, dtype=jnp.int32)[None, :])
+        return ref.paged_flash_prefill_scan_ref(
+            q, kg.reshape(B * nbmax, BS, Hkv, D),
+            vg.reshape(B * nbmax, BS, Hkv, D), ident, st)
+
+    for slots in (4, 16):
+        q = jnp.asarray(
+            rng.standard_normal((slots, H, C, D)).astype(np.float32))
+        nb_used = 10                          # ~144-token written prefix
+        bt = np.zeros((slots, NBMAX), np.int32)
+        for b in range(slots):
+            bt[b, :nb_used] = 1 + ((b * nb_used + np.arange(nb_used))
+                                   % (NB - 1))
+        bt = jnp.asarray(bt)
+        st = jnp.full((slots,), (nb_used - 1) * BS, jnp.int32)
+
+        arms = [
+            ("oracle", jax.jit(lambda q, kp, vp, bt, st:
+                               ref.paged_flash_prefill_ref(q, kp, vp, bt, st))),
+            ("flash", jax.jit(flash_dense)),
+            ("pagedflash", jax.jit(lambda q, kp, vp, bt, st:
+                                   ref.paged_flash_prefill_scan_ref(
+                                       q, kp, vp, bt, st))),
+        ]
+        us0, want = _timeit(lambda: arms[0][1](q, kp, vp, bt, st), n=10)
+        _row(f"prefill_attn_oracle_slots{slots}", us0,
+             f"dense_len={NBMAX * BS};written={nb_used * BS}")
+        for name, fn in arms[1:]:
+            us, got = _timeit(lambda fn=fn: fn(q, kp, vp, bt, st), n=10)
+            err = float(jnp.abs(got - want).max())
+            _row(f"prefill_attn_{name}_slots{slots}", us,
+                 f"speedup_vs_oracle={us0 / max(us, 1e-9):.2f}x;"
+                 f"maxerr={err:.1e}")
+
+    # ---- scheduler end-to-end: pure chunked-prefill workload ---------
+    cfg = get_config("llama2-7b", smoke=True).replace(
+        dtype=jnp.float32, num_layers=2, d_model=64, num_heads=2,
+        num_kv_heads=2, d_ff=128, vocab_size=256)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    max_len, bs = 4096, 16
+    sysp = rng.integers(1, cfg.vocab_size, size=32).tolist()
+    lens = [48, 96, 64, 112, 80, 48, 64, 96, 48, 80, 112, 64]
+    reqs = [sysp + rng.integers(1, cfg.vocab_size, size=n).tolist()
+            for n in lens]
+    ptoks = sum(len(p) for p in reqs)
+
+    def run_arm(env, slots):
+        with _env_arm(env):
+            sch = Scheduler(cfg, params, slots=slots, max_len=max_len,
+                            block_size=bs, chunk=16,
+                            num_blocks=2 * (max_len // bs) + 4,
+                            prefix_cache=False)
+
+            def once():
+                for i, p in enumerate(reqs):
+                    sch.submit(Request(rid=i, prompt=p, max_new=1))
+                return sch.run()
+
+            done = once()                       # warm the jitted chunk step
+            t0 = time.perf_counter()
+            once()
+            return time.perf_counter() - t0, done, sch
+
+    for slots in (4, 16):
+        t_o, done_o, _ = run_arm({"REPRO_CHUNK_ORACLE": "1"}, slots)
+        t_f, done_f, sch = run_arm({"REPRO_OPT_PAGEDFLASH": "1"}, slots)
+        assert done_o == done_f, "arm outputs diverged"
+        amort = sch.stream_amortization_report()
+        _row(f"prefill_sched_oracle_slots{slots}", t_o * 1e6,
+             f"prefill_tok_s={ptoks / t_o:.1f}")
+        _row(f"prefill_sched_flash_slots{slots}", t_f * 1e6,
+             f"prefill_tok_s={ptoks / t_f:.1f};"
+             f"speedup_vs_oracle={t_o / t_f:.2f}x;tokens_identical=True;"
+             f"mean_prefill_launches={amort['mean_prefill_launches']:.2f}")
+
+    # ---- dispatch accounting: kernel vs oracle chunk-step jaxpr ------
+    dcfg = get_config("llama2-7b", smoke=True).replace(
+        dtype=jnp.float32, quant_mode="w4a8", use_lut_softmax=True)
+    qp = quantize_params(api.init(jax.random.PRNGKey(0), dcfg), dcfg)
+    ops.force_pallas(True)     # count the kernel path, not the CPU oracle
+    try:
+        counts = {}
+        for tag, env in (("kernel", {}),
+                         ("oracle", {"REPRO_CHUNK_ORACLE": "1"})):
+            with _env_arm(env):
+                eng = Engine(dcfg, qp, max_len=64)
+                t0 = time.perf_counter()
+                total = eng.prefill_eqn_count(chunk=16)
+                us = (time.perf_counter() - t0) * 1e6
+                counts[tag] = {
+                    "eqns": total,
+                    "pallas": eng.prefill_eqn_count(
+                        chunk=16, primitive="pallas_call"),
+                    "dot": eng.prefill_eqn_count(
+                        chunk=16, primitive="dot_general"),
+                    "gather": eng.prefill_eqn_count(
+                        chunk=16, primitive="gather"),
+                }
+                c = counts[tag]
+                _row(f"prefill_dispatch_{tag}", us,
+                     f"jaxpr_eqns={c['eqns']};pallas_calls={c['pallas']};"
+                     f"dot_general={c['dot']};gather={c['gather']}")
+    finally:
+        ops.force_pallas(None)
+    _row("prefill_dispatch_densify_evidence", 0.0,
+         f"kernel_dot_general={counts['kernel']['dot']} (the LM head);"
+         f"oracle_extra_dot_general="
+         f"{counts['oracle']['dot'] - counts['kernel']['dot']};"
+         f"oracle_extra_gather="
+         f"{counts['oracle']['gather'] - counts['kernel']['gather']}")
+
+    # ---- analytic kernel-residency row -------------------------------
+    us, r = _timeit(pm.chunk_prefill_residency_report)
+    _row("prefill_residency_model", us,
+         f"dense_oracle_ms={r['dense_oracle_ms']:.2f};"
+         f"kernel_resident_ms={r['kernel_resident_ms']:.2f};"
+         f"traffic_reduction={r['traffic_reduction']:.3f}")
+
+
 ALL_BENCHES = [bench_table1, bench_fig8, bench_fig9, bench_table2,
                bench_kernels, bench_fused, bench_decode_dispatch,
-               bench_paged]
+               bench_paged, bench_prefill]
 
 
 def run_benches(benches, keep_going: bool = False):
@@ -324,16 +516,19 @@ def write_json(target=None) -> Path:
     target = Path(target) if target else BENCH_JSON
     target.write_text(json.dumps({"rows": _ROWS}, indent=2) + "\n")
     print(f"# wrote {target}")
-    pr5 = [r for r in _ROWS if r["name"].startswith("paged_")]
-    if pr5:
+    for prefix, tag, default in (("paged_", "pr5", PR5_JSON),
+                                 ("prefill_", "pr6", PR6_JSON)):
+        rows = [r for r in _ROWS if r["name"].startswith(prefix)]
+        if not rows or target == default:   # already the canonical artifact
+            continue
         if target == BENCH_JSON:
-            pr5_target = PR5_JSON
+            sub = default
         elif "pr3" in target.name:    # mirror redirects (e.g. fast mode)
-            pr5_target = target.with_name(target.name.replace("pr3", "pr5"))
+            sub = target.with_name(target.name.replace("pr3", tag))
         else:
-            pr5_target = target.with_name("pr5_" + target.name)
-        pr5_target.write_text(json.dumps({"rows": pr5}, indent=2) + "\n")
-        print(f"# wrote {pr5_target}")
+            sub = target.with_name(f"{tag}_" + target.name)
+        sub.write_text(json.dumps({"rows": rows}, indent=2) + "\n")
+        print(f"# wrote {sub}")
     return target
 
 

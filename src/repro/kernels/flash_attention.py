@@ -5,7 +5,13 @@ dependency; this kernel is its TPU form: KV is consumed in (block_k × D)
 tiles with running (m, ℓ, acc) state in VMEM scratch, so attention memory
 is O(block) instead of O(S²). Supports causal masking, GQA (KV-head
 sharing via the BlockSpec index map), local-window attention (for
-recurrentgemma), and the paper's 64-segment LUT exp mode.
+recurrentgemma), the paper's 64-segment LUT exp mode, and per-batch
+absolute query offsets (``q_offset``) for chunked prefill: queries at
+absolute positions q_offset[b]..q_offset[b]+Sq-1 attend keys 0..Sk-1
+under the offset-causal mask kpos <= q_offset[b] + i (DESIGN.md §11).
+With q_offset the causal mask alone bounds validity — the newest query
+IS the newest written key — so keys past the written prefix (stale pool
+contents, chunk padding) are masked without a separate length operand.
 """
 from __future__ import annotations
 
@@ -23,8 +29,8 @@ from repro.kernels.group_softmax import _lut_exp_block
 _NEG = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, ab_ref, o_ref, m_ref, l_ref, acc_ref, *,
-            scale, causal, window, use_lut, sq, sk, bq, bk):
+def _kernel(q_ref, k_ref, v_ref, off_ref, ab_ref, o_ref, m_ref, l_ref,
+            acc_ref, *, scale, causal, window, use_lut, sk, bq, bk):
     qi, ki = pl.program_id(1), pl.program_id(2)
     nk = pl.num_programs(2)
 
@@ -34,12 +40,16 @@ def _kernel(q_ref, k_ref, v_ref, ab_ref, o_ref, m_ref, l_ref, acc_ref, *,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
+    # absolute position of this block's first query row (suffix alignment
+    # off == sk - sq by default; chunked prefill passes per-batch offsets)
+    off = off_ref[0, 0]
+
     # ---- causal block-level skip: block fully in the masked future ----
-    q_last = qi * bq + bq - 1 + (sk - sq)    # largest key this block sees
+    q_last = off + qi * bq + bq - 1          # largest key this block sees
     k_first = ki * bk
     run = jnp.logical_or(not causal, k_first <= q_last)
     if window is not None:
-        q_first = qi * bq + (sk - sq)
+        q_first = off + qi * bq
         k_last = ki * bk + bk - 1
         run = jnp.logical_and(run, k_last > q_first - window)
 
@@ -49,8 +59,8 @@ def _kernel(q_ref, k_ref, v_ref, ab_ref, o_ref, m_ref, l_ref, acc_ref, *,
         k = k_ref[0].astype(jnp.float32)                   # (bk, D)
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
 
-        qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) \
-            + (sk - sq)
+        qpos = off + qi * bq \
+            + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
         kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
         mask = kpos < sk
         if causal:
@@ -86,8 +96,14 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: Optional[int] = None,
                     scale: Optional[float] = None, use_lut: bool = False,
                     block_q: int = 128, block_k: int = 128,
+                    q_offset: Optional[jax.Array] = None,
                     interpret: bool = False) -> jax.Array:
     """q (B, H, Sq, D); k/v (B, Hkv, Sk, D), Hkv | H. Returns (B, H, Sq, D).
+
+    ``q_offset`` (B,) int32: absolute position of each batch row's first
+    query (chunked prefill over a longer written prefix); requires
+    ``causal`` — the offset-causal mask is what bounds validity. Default
+    is the classic suffix alignment qpos = arange(Sq) + (Sk - Sq).
 
     Sequence lengths must be divisible by the block sizes (callers pad;
     the in-kernel ``kpos < sk`` mask makes KV padding safe)."""
@@ -97,11 +113,16 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     bq = min(block_q, Sq)
     bk = min(block_k, Sk)
     assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    assert q_offset is None or causal, "q_offset requires causal masking"
     scale = scale if scale is not None else D ** -0.5
 
     q3 = q.reshape(B * H, Sq, D)
     k3 = k.reshape(B * Hkv, Sk, D)
     v3 = v.reshape(B * Hkv, Sk, D)
+    if q_offset is None:
+        off = jnp.full((B, 1), Sk - Sq, jnp.int32)
+    else:
+        off = q_offset.reshape(B, 1).astype(jnp.int32)
 
     def kv_head(h):
         return (h // H) * Hkv + (h % H) // rep
@@ -110,7 +131,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     ab = jnp.stack([a, b], axis=1)
 
     kern = functools.partial(_kernel, scale=scale, causal=causal,
-                             window=window, use_lut=use_lut, sq=Sq, sk=Sk,
+                             window=window, use_lut=use_lut, sk=Sk,
                              bq=bq, bk=bk)
     out = pl.pallas_call(
         kern,
@@ -119,6 +140,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pl.BlockSpec((1, bq, D), lambda h, qi, ki: (h, qi, 0)),
             pl.BlockSpec((1, bk, D), lambda h, qi, ki: (kv_head(h), ki, 0)),
             pl.BlockSpec((1, bk, D), lambda h, qi, ki: (kv_head(h), ki, 0)),
+            pl.BlockSpec((1, 1), lambda h, qi, ki: (h // H, 0)),
             pl.BlockSpec((LUT_SEGMENTS, 2), lambda h, qi, ki: (0, 0)),
         ],
         out_specs=pl.BlockSpec((1, bq, D), lambda h, qi, ki: (h, qi, 0)),
@@ -131,5 +153,5 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         compiler_params=pltpu.CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
-    )(q3, k3, v3, ab)
+    )(q3, k3, v3, off, ab)
     return out.reshape(B, H, Sq, D)

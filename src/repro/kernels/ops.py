@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from repro.kernels import attention_decode as _ad
 from repro.kernels import flash_attention as _fa
 from repro.kernels import paged_attention_decode as _pad
+from repro.kernels import paged_flash_prefill as _pfp
 from repro.kernels import selective_scan as _ss
 from repro.kernels import group_rmsnorm as _gr
 from repro.kernels import group_softmax as _gs
@@ -159,19 +160,43 @@ def group_layernorm(x, gamma, beta, group_size=128, eps=1e-5):
                                    eps=eps)
 
 
+def _chunk_oracle() -> bool:
+    """``REPRO_CHUNK_ORACLE=1``: rollback switch pinning every chunked-
+    prefill attention to the PR 5 materialized gather oracle (also what
+    the BENCH_pr6 dispatch rows trace as the ``dense-oracle`` arm)."""
+    return os.environ.get("REPRO_CHUNK_ORACLE") == "1"
+
+
 def attention(q, k, v, *, causal=True, window=None, use_lut=False,
               scale=None, block_q=128, block_k=128, q_offset=None):
     """Multi-head attention; flash kernel on TPU; off-TPU: the O(S)-memory
     flash-scan oracle for long sequences (REPRO_OPT_FLASH=1 — the §Perf
     memory-term optimization), else the exact materialized oracle.
-    ``q_offset`` (B,): chunked-prefill alignment (queries start at an
-    absolute offset over a longer gathered prefix) — exact oracle only;
-    a flash-kernel chunk path is a ROADMAP follow-on."""
+    ``q_offset`` (B,): chunked-prefill alignment — queries start at an
+    absolute per-batch offset over a longer written prefix. On the kernel
+    path this lowers to the offset-causal flash kernel (DESIGN.md §11)
+    honoring ``block_q``/``block_k``, and shapes the grid cannot tile
+    RAISE rather than silently densifying; off-TPU it stays the exact
+    oracle (bit-identical to PR 5 serving)."""
+    Sq, Sk = q.shape[2], k.shape[2]
     if q_offset is not None:
+        assert causal, "q_offset requires causal masking for validity"
+        if _use_pallas() and not _chunk_oracle():
+            bq, bk = min(block_q, Sq), min(block_k, Sk)
+            if Sq % bq != 0 or Sk % bk != 0:
+                raise ValueError(
+                    f"attention(q_offset=): grid cannot tile Sq={Sq}/"
+                    f"block_q={bq}, Sk={Sk}/block_k={bk}; pad the chunk "
+                    "or pass dividing block sizes (the hot loop must not "
+                    "densify)")
+            return _fa.flash_attention(q, k, v, causal=True, window=window,
+                                       use_lut=use_lut, scale=scale,
+                                       block_q=block_q, block_k=block_k,
+                                       q_offset=q_offset,
+                                       interpret=_interpret())
         return ref.attention_ref(q, k, v, causal=causal, window=window,
                                  use_lut=use_lut, scale=scale,
                                  q_offset=q_offset)
-    Sq, Sk = q.shape[2], k.shape[2]
     if _use_pallas() and Sq % min(block_q, Sq) == 0 \
             and Sk % min(block_k, Sk) == 0:
         return _fa.flash_attention(q, k, v, causal=causal, window=window,
@@ -185,6 +210,41 @@ def attention(q, k, v, *, causal=True, window=None, use_lut=False,
             scale=scale)
     return ref.attention_ref(q, k, v, causal=causal, window=window,
                              use_lut=use_lut, scale=scale)
+
+
+def paged_flash_prefill(q, k_pool, v_pool, block_tables, start, *,
+                        window=None, use_lut=False, scale=None,
+                        block_q=128):
+    """Chunked-prefill attention directly over the paged KV pool
+    (DESIGN.md §11): q (B, H, C, D) chunk queries at absolute positions
+    ``start``..start+C-1; pools (NB, BS, Hkv, D); block_tables (B, NBMAX).
+    On TPU the Pallas kernel streams KV tiles through scalar-prefetched
+    block-table gathers — no dense prefix copy; untileable chunks RAISE.
+    Off-TPU the default lowering is the gather + materialized-oracle
+    composition (bit-identical to the PR 5 chunk path — the Scheduler's
+    token-identity tests rely on this); ``REPRO_OPT_PAGEDFLASH=1``
+    switches it to the O(written-prefix) online-softmax scan that never
+    densifies the prefix (matches to fp32 round-off)."""
+    C = q.shape[2]
+    if _use_pallas() and not _chunk_oracle():
+        bq = min(block_q, C)
+        if C % bq != 0:
+            raise ValueError(
+                f"paged_flash_prefill: grid cannot tile C={C}/"
+                f"block_q={bq}; pad the chunk (the hot loop must not "
+                "densify)")
+        return _pfp.paged_flash_prefill(
+            q, k_pool, v_pool, block_tables, start, window=window,
+            use_lut=use_lut, scale=scale, block_q=block_q,
+            interpret=_interpret())
+    from repro.parallel.flags import opt
+    if opt("PAGEDFLASH", default=False) and not _chunk_oracle():
+        return ref.paged_flash_prefill_scan_ref(
+            q, k_pool, v_pool, block_tables, start, window=window,
+            use_lut=use_lut, scale=scale)
+    return ref.paged_flash_prefill_ref(
+        q, k_pool, v_pool, block_tables, start, window=window,
+        use_lut=use_lut, scale=scale)
 
 
 def selective_scan(dt, xs, bm, cm, a_log, h0, *, block_s=64, block_d=128):

@@ -1,0 +1,172 @@
+"""Paged flash-prefill kernel (DESIGN.md §11).
+
+Chunked prefill attends a chunk of C queries at absolute positions
+``start[b]..start[b]+C-1`` over the request's whole written prefix. The
+PR 5 path assembled that prefix by gathering the block pool through the
+block table into a dense ``(B, NBMAX·BS, Hkv, D)`` copy and running the
+materialized-score oracle over it — the one attention in the serve hot
+loop that left the Pallas kernel family, and the copy re-densified
+exactly the prefix-cache blocks the pool exists to share.
+
+This kernel keeps chunk-prefill attention resident: the per-request
+block table rides in as a *scalar-prefetch* operand (the same one-level
+indirection idiom as ``paged_attention_decode.py``) so the K/V BlockSpec
+index maps fetch pool blocks directly — KV streams through VMEM one
+``(BS, D)`` tile at a time, StreamDCIM-style, and no dense prefix copy
+ever exists in HBM. The grid is ``(B·H, C//bq, NBMAX)`` with the flash
+running-(m, ℓ, acc) state of ``flash_attention.py`` in VMEM scratch.
+
+Masking: the offset-causal mask ``kpos <= start[b] + i`` alone bounds
+validity — the chunk's own K/V is written to the pool before the kernel
+runs, so the newest query IS the newest written key; stale pool
+contents, null-block padding past a request's table, and final-chunk
+padding rows all fall in the masked future (padding rows' outputs are
+garbage-but-unread, exactly as in the PR 5 oracle path). Table slots
+past the written prefix still cost a (skipped) grid step: the causal
+block-level skip prunes their compute, the same trick the dense flash
+kernel uses for future query blocks.
+
+LUT mode uses the flash running rescale (one LUT-exp per block plus a
+LUT-exp correction), matching ``flash_attention``'s algebra — NOT the
+two-sweep exact-global-max structure of the decode kernels, so LUT-mode
+outputs agree with the grouped oracle only to LUT tolerance (DESIGN.md
+§7/§11); exact-exp mode matches to fp32 round-off.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.fusion import LUT_HI, LUT_LO, LUT_SEGMENTS, build_exp_lut
+from repro.kernels import pallas_compat as pltpu
+from repro.kernels.group_softmax import _lut_exp_block
+
+_NEG = -1e30
+
+
+def _kernel(bt_ref, q_ref, k_ref, v_ref, start_ref, ab_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, scale, window, use_lut, bs, bq):
+    qi, ji = pl.program_id(1), pl.program_id(2)
+    nb_max = pl.num_programs(2)
+
+    @pl.when(ji == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    start = start_ref[0, 0]
+
+    # ---- offset-causal block-level skip: logical block ji holds keys
+    # ji·BS..ji·BS+BS-1; skip blocks fully past this query block's newest
+    # row (prefix-cache hits never even touch the pruned pool blocks) ----
+    q_last = start + qi * bq + bq - 1
+    k_first = ji * bs
+    run = k_first <= q_last
+    if window is not None:
+        q_first = start + qi * bq
+        k_last = ji * bs + bs - 1
+        run = jnp.logical_and(run, k_last > q_first - window)
+
+    @pl.when(run)
+    def _():
+        q = q_ref[0].astype(jnp.float32) * scale            # (bq, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)           # (bs, D)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+
+        qpos = start + qi * bq \
+            + jax.lax.broadcasted_iota(jnp.int32, (bq, bs), 0)
+        # logical position of this block = table slot ji (the index map
+        # read the pool block id; positions stay in request-logical order)
+        kpos = ji * bs + jax.lax.broadcasted_iota(jnp.int32, (bq, bs), 1)
+        mask = kpos <= qpos
+        if window is not None:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        s = jnp.where(mask, s, _NEG)
+
+        m_prev = m_ref[:, :1]                               # (bq, 1)
+        m_blk = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_blk)
+        if use_lut:
+            p = _lut_exp_block(s - m_new, ab_ref, LUT_LO, LUT_HI)
+            corr = _lut_exp_block(m_prev - m_new, ab_ref, LUT_LO, LUT_HI)
+        else:
+            p = jnp.exp(s - m_new)
+            corr = jnp.exp(m_prev - m_new)
+        p = jnp.where(mask, p, 0.0)
+        l_new = l_ref[:, :1] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr \
+            + jnp.dot(p, v_ref[0, :, 0, :].astype(jnp.float32),
+                      preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ji == nb_max - 1)
+    def _():
+        l = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_flash_prefill(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                        block_tables: jax.Array, start: jax.Array, *,
+                        window: Optional[int] = None, use_lut: bool = False,
+                        scale: Optional[float] = None, block_q: int = 128,
+                        interpret: bool = False) -> jax.Array:
+    """q (B, H, C, D) chunk queries; k_pool/v_pool (NB, BS, Hkv, D) shared
+    block pools; block_tables (B, NBMAX) int32 pool-block ids per logical
+    block (pad with 0 — the null block); start (B,) int32 absolute
+    position of each chunk's first query. Returns (B, H, C, D). The KV
+    tile is the pool block size BS; C must divide by min(block_q, C)."""
+    B, H, C, D = q.shape
+    NB, BS, Hkv = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    rep = H // Hkv
+    nbmax = block_tables.shape[1]
+    bq = min(block_q, C)
+    assert C % bq == 0, (C, bq)
+    scale = scale if scale is not None else D ** -0.5
+
+    q3 = q.reshape(B * H, C, D)
+    bt = block_tables.astype(jnp.int32)
+    st = start.reshape(B, 1).astype(jnp.int32)
+    a, b = build_exp_lut()
+    ab = jnp.stack([a, b], axis=1)
+
+    def kv_head(h):
+        return (h % H) // rep
+
+    kern = functools.partial(_kernel, scale=scale, window=window,
+                             use_lut=use_lut, bs=BS, bq=bq)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B * H, C // bq, nbmax),          # (bh, q block, logical blk)
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda h, qi, ji, bt: (h, qi, 0)),
+            pl.BlockSpec((1, BS, 1, D),
+                         lambda h, qi, ji, bt: (bt[h // H, ji], 0,
+                                                kv_head(h), 0)),
+            pl.BlockSpec((1, BS, 1, D),
+                         lambda h, qi, ji, bt: (bt[h // H, ji], 0,
+                                                kv_head(h), 0)),
+            pl.BlockSpec((1, 1), lambda h, qi, ji, bt: (h // H, 0)),
+            pl.BlockSpec((LUT_SEGMENTS, 2), lambda h, qi, ji, bt: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda h, qi, ji, bt: (h, qi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 128), jnp.float32),   # running max (lane-bcast)
+            pltpu.VMEM((bq, 128), jnp.float32),   # running denom
+            pltpu.VMEM((bq, D), jnp.float32),     # running accumulator
+        ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * H, C, D), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(bt, q3, k_pool, v_pool, st, ab)
+    return out.reshape(B, H, C, D)

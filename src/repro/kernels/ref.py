@@ -147,6 +147,86 @@ def paged_attention_decode_ref(q: jax.Array, k_pool: jax.Array,
                                 use_lut=use_lut, scale=scale, window=window)
 
 
+def paged_flash_prefill_ref(q: jax.Array, k_pool: jax.Array,
+                            v_pool: jax.Array, block_tables: jax.Array,
+                            start: jax.Array, *,
+                            window: Optional[int] = None,
+                            use_lut: bool = False,
+                            scale: Optional[float] = None) -> jax.Array:
+    """Golden oracle for the paged flash-prefill kernel: gather the block
+    pool through the table into the dense prefix layout, then run the
+    exact materialized offset-causal oracle. This IS the PR 5 chunk path
+    (gather + ``attention_ref(q_offset=)``), kept bit-identical so the
+    Scheduler's off-TPU token-identity guarantee is unchanged. q
+    (B, H, C, D); pools (NB, BS, Hkv, D); block_tables (B, NBMAX);
+    start (B,) absolute chunk offsets. Returns (B, H, C, D)."""
+    kg = jnp.swapaxes(gather_paged_kv_ref(k_pool, block_tables), 1, 2)
+    vg = jnp.swapaxes(gather_paged_kv_ref(v_pool, block_tables), 1, 2)
+    return attention_ref(q, kg, vg, causal=True, window=window,
+                         use_lut=use_lut, scale=scale,
+                         q_offset=start.reshape(q.shape[0]))
+
+
+def paged_flash_prefill_scan_ref(q: jax.Array, k_pool: jax.Array,
+                                 v_pool: jax.Array, block_tables: jax.Array,
+                                 start: jax.Array, *,
+                                 window: Optional[int] = None,
+                                 use_lut: bool = False,
+                                 scale: Optional[float] = None) -> jax.Array:
+    """O(written-prefix) online-softmax lowering of the paged flash
+    prefill (the off-TPU analogue of the Pallas kernel's dataflow,
+    enabled by ``REPRO_OPT_PAGEDFLASH=1``): KV blocks are fetched through
+    the table one (B, BS) tile at a time inside a dynamically-bounded
+    loop — no dense (B, NBMAX·BS) prefix copy and no (C, NBMAX·BS)
+    materialized logits ever exist — and the loop stops at the last block
+    the offset-causal mask can reach, so chunk cost scales with the
+    written prefix, not the virtual max_len. Matches the gather oracle to
+    fp32 round-off (exact exp; LUT mode to LUT tolerance — the running
+    rescale, DESIGN.md §11)."""
+    from repro.core import fusion
+    B, H, C, D = q.shape
+    BS, Hkv = k_pool.shape[1], k_pool.shape[2]
+    G = H // Hkv
+    nbmax = block_tables.shape[1]
+    s_ = scale if scale is not None else D ** -0.5
+    exp = fusion.lut_exp if use_lut else jnp.exp
+    qg = (q.astype(jnp.float32) * s_).reshape(B, Hkv, G, C, D)
+    st = start.reshape(B).astype(jnp.int32)
+    qpos = st[:, None] + jnp.arange(C, dtype=jnp.int32)[None]       # (B, C)
+    bt = block_tables.astype(jnp.int32)
+    # last logical block any query row can see (newest query = newest key)
+    nb_live = jnp.minimum(jnp.max((st + C + BS - 1) // BS), nbmax)
+
+    def body(i, carry):
+        m, l, acc = carry
+        ids = bt[:, i]                                              # (B,)
+        kb = jnp.moveaxis(k_pool[ids].astype(jnp.float32), 1, 2)
+        vb = jnp.moveaxis(v_pool[ids].astype(jnp.float32), 1, 2)
+        sc = jnp.einsum("bhgcd,bhsd->bhgcs", qg, kb,
+                        preferred_element_type=jnp.float32)
+        kpos = i * BS + jnp.arange(BS, dtype=jnp.int32)             # (BS,)
+        mask = kpos[None, :] <= qpos[:, :, None]                    # (B,C,BS)
+        if window is not None:
+            mask = mask & (kpos[None, :] > qpos[:, :, None] - window)
+        mask = mask[:, None, None]                                  # bcast H,G
+        sc = jnp.where(mask, sc, -1e30)
+        m_blk = jnp.max(sc, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m, m_blk)
+        p = jnp.where(mask, exp(sc - m_new), 0.0)
+        corr = exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * corr + jnp.einsum("bhgcs,bhsd->bhgcd", p, vb,
+                                          preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((B, Hkv, G, C, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, C, 1), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, C, D), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, nb_live, body, (m0, l0, a0))
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.reshape(B, H, C, D).astype(q.dtype)
+
+
 def group_softmax_ref(x: jax.Array, group_size: int = 64,
                       use_lut: bool = True) -> jax.Array:
     return fusion.group_softmax(x, group_size=group_size, use_lut=use_lut)

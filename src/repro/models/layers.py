@@ -327,15 +327,15 @@ def apply_attention(p: Dict, cfg: ModelConfig, x: jax.Array,
                 use_lut=cfg.use_lut_softmax, window=window)
             out = out[:, :, None, :]             # (B, H, q=1, D)
         else:
-            # chunked prefill: attend the chunk's queries (absolute
-            # positions idx..idx+S-1) over the gathered written prefix;
-            # causal masking at the absolute offset bounds validity
-            kg, vg = gather_paged_kv(new_cache)
-            out = ops.attention(jnp.swapaxes(q, 1, 2),
-                                jnp.swapaxes(kg, 1, 2),
-                                jnp.swapaxes(vg, 1, 2),
-                                causal=True, window=window,
-                                use_lut=cfg.use_lut_softmax, q_offset=idx)
+            # chunked prefill: the chunk's queries (absolute positions
+            # idx..idx+S-1) attend the written prefix straight through
+            # the block table (DESIGN.md §11) — kernel on TPU, gather +
+            # materialized oracle (the PR 5 path, bit-identical)
+            # elsewhere; offset-causal masking bounds validity
+            out = ops.paged_flash_prefill(
+                jnp.swapaxes(q, 1, 2), new_cache["k"], new_cache["v"],
+                new_cache["bt"], idx, window=window,
+                use_lut=cfg.use_lut_softmax)
         out = jnp.swapaxes(out, 1, 2).astype(x.dtype)
     elif cache is not None and kv_x is None:
         new_cache = write_kv_cache(cache, k, v, cache_index)

@@ -213,10 +213,11 @@ def prefill(params, cfg, tokens, cache):
 
 
 def prefill_chunk(params, cfg, tokens, cache, start):
-    """Chunked paged prefill (see transformer.prefill_chunk). NOTE:
-    GShard capacity competition is grouping-dependent — chunked prefill
-    is token-exact versus whole-prompt prefill only while the expert
-    capacity never binds (DESIGN.md §10)."""
+    """Chunked paged prefill (see transformer.prefill_chunk; attention
+    goes block-table-direct through ``ops.paged_flash_prefill``, §11).
+    NOTE: GShard capacity competition is grouping-dependent — chunked
+    prefill is token-exact versus whole-prompt prefill only while the
+    expert capacity never binds (DESIGN.md §10)."""
     B, C = tokens.shape
     x = L.embed_tokens(params["embed"], tokens, cfg.dtype)
     pos = start.reshape(B)[:, None] + jnp.arange(C, dtype=jnp.int32)[None]

@@ -139,10 +139,11 @@ def prefill_chunk(params: Dict, cfg: ModelConfig, tokens: jax.Array,
                   cache: Dict, start: jax.Array) -> Tuple[jax.Array, Dict]:
     """Chunked prefill into a paged cache: tokens (B, C) occupy absolute
     positions start..start+C-1 (start (B,) int32); each chunk attends
-    over the previously written prefix through the block table. Returns
-    FULL-chunk logits (B, C, V) — the scheduler reads the row of the
-    last real prompt token, so chunk padding needs no re-decode hack —
-    and the updated cache."""
+    over the previously written prefix DIRECTLY through the block table
+    (``ops.paged_flash_prefill`` — Pallas-resident on TPU, no dense
+    prefix gather; DESIGN.md §11). Returns FULL-chunk logits (B, C, V)
+    — the scheduler reads the row of the last real prompt token, so
+    chunk padding needs no re-decode hack — and the updated cache."""
     B, C = tokens.shape
     x = L.embed_tokens(params["embed"], tokens, cfg.dtype)
     pos = start.reshape(B)[:, None] + jnp.arange(C, dtype=jnp.int32)[None]

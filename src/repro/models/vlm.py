@@ -72,7 +72,8 @@ def prefill_chunk(params: Dict, cfg: ModelConfig, tokens: jax.Array,
                   cache: Dict, start: jax.Array) -> Tuple[jax.Array, Dict]:
     """Chunked paged prefill, text-only (the stubbed vision prefix is a
     ROADMAP follow-on for paged serving): identical t/h/w M-RoPE streams
-    starting at each request's absolute offset."""
+    starting at each request's absolute offset; attention goes
+    block-table-direct through ``ops.paged_flash_prefill`` (§11)."""
     B, C = tokens.shape
     x = L.embed_tokens(params["embed"], tokens, cfg.dtype)
     p = start.reshape(B)[:, None] + jnp.arange(C, dtype=jnp.int32)[None]

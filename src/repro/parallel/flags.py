@@ -10,6 +10,18 @@ disabled for A/B against the paper-faithful baseline:
                        GSPMD already propagates it — §Perf, refuted)
   REPRO_BASELINE=1     all of the above at once
   REPRO_OPT_EPMOE=1    (refuted ablation) pin dispatched tokens E→"data"
+
+Opt-IN flags (default off — they change off-TPU lowering choices):
+
+  REPRO_OPT_PAGEDFLASH=1  off-TPU chunk-prefill attention lowers to the
+                       O(written-prefix) online-softmax scan instead of
+                       the bit-exact PR 5 gather+oracle (DESIGN.md §11;
+                       matches to fp32 round-off, so the Scheduler's
+                       token-identity default stays the oracle)
+
+Related (read by kernels/ops.py, not here): REPRO_CHUNK_ORACLE=1 pins
+every chunked-prefill attention to the PR 5 materialized gather oracle
+on ALL backends — the rollback switch and the BENCH_pr6 dense arm.
 """
 import os
 

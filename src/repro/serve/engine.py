@@ -99,6 +99,7 @@ class Engine:
         self.params = params
         self.max_len = max_len
         self._dec_jaxprs: Dict[int, object] = {}
+        self._pref_jaxprs: Dict[tuple, object] = {}
         self._prefill = jax.jit(
             lambda p, b, c: api.prefill_step(p, cfg, b, c))
         self._decode = jax.jit(
@@ -124,6 +125,36 @@ class Engine:
         reported in BENCH_pr3.json. ``primitive="pallas_call"`` counts
         kernel launches only."""
         return count_eqns(self._decode_jaxpr(batch).jaxpr, primitive)
+
+    def _prefill_jaxpr(self, batch: int, chunk: int, block_size: int):
+        """Chunked-prefill-step jaxpr over a paged cache (same caching
+        caveats as ``_decode_jaxpr``: traced once per shape, under the
+        kernel-dispatch mode active at first call)."""
+        key = (batch, chunk, block_size)
+        if key not in self._pref_jaxprs:
+            nb = batch * (self.max_len // block_size) + 1
+            cache = api.init_cache(self.cfg, batch, self.max_len,
+                                   num_blocks=nb, block_size=block_size)
+            tok = jnp.zeros((batch, chunk), jnp.int32)
+            start = jnp.zeros((batch,), jnp.int32)
+            self._pref_jaxprs[key] = jax.make_jaxpr(
+                lambda p, t, c, s: api.prefill_chunk_step(
+                    p, self.cfg, {"tokens": t}, c, s))(
+                self.params, tok, cache, start)
+        return self._pref_jaxprs[key]
+
+    def prefill_eqn_count(self, batch: int = 1, chunk: int = 32,
+                          block_size: int = 16,
+                          primitive: Optional[str] = None) -> int:
+        """Op dispatches issued by one chunked-prefill tick — the prefill
+        mirror of ``decode_eqn_count`` (ROADMAP item 3's kernel-residency
+        metric, reported in BENCH_pr6.json). ``primitive="pallas_call"``
+        counts kernel launches; ``primitive="dot_general"`` counts the
+        matmuls that escaped the kernel family — on the kernel path with
+        quantized weights this must be exactly the LM head (attention and
+        every layer matmul stay Pallas-resident, DESIGN.md §11)."""
+        return count_eqns(
+            self._prefill_jaxpr(batch, chunk, block_size).jaxpr, primitive)
 
     def generate(self, tokens: np.ndarray, sc: ServeConfig,
                  extra_batch: Optional[Dict] = None) -> np.ndarray:

@@ -38,7 +38,16 @@ The per-tick decode-active counts feed the WS-OCS weight-stream
 amortization model (``sim.perf_model.scheduler_amortization_report``):
 the RCW-bound weight stream is paid once per tick and divided by the
 number of active decode slots — the denominator this subsystem exists
-to keep high.
+to keep high. Per-tick prefill chunk-launch counts (``tick_prefill``)
+ride along in the same report so prefill batching is measured the same
+way.
+
+Since PR 6 the chunk step's attention consumes the block table
+*directly*: ``models.layers`` routes it to ``ops.paged_flash_prefill``,
+whose Pallas kernel gathers K/V pool blocks through a scalar-prefetched
+table (DESIGN.md §11) — the scheduler no longer triggers any dense
+``gather_paged_kv`` copy of the prefix on the chunk path, so
+prefix-cache hits are never re-densified.
 """
 from __future__ import annotations
 
@@ -121,6 +130,7 @@ class Scheduler:
         self.tokens = np.zeros((slots, 1), np.int32)
         self._ticket = 0
         self.tick_active: List[int] = []         # decode slots per tick
+        self.tick_prefill: List[int] = []        # prefill chunk launches/tick
 
         self._decode = jax.jit(
             lambda p, t, c, i: api.serve_step(p, cfg, t, c, i))
@@ -163,7 +173,8 @@ class Scheduler:
 
     def stream_amortization_report(self) -> Dict[str, float]:
         from repro.sim.perf_model import scheduler_amortization_report
-        return scheduler_amortization_report(self.tick_active)
+        return scheduler_amortization_report(self.tick_active,
+                                             prefill_counts=self.tick_prefill)
 
     # -- admission -------------------------------------------------------
     def _admit(self) -> None:
@@ -218,9 +229,11 @@ class Scheduler:
             np.broadcast_to(bt[None], (self.num_layers,) + bt.shape))
 
     def _prefill_tick(self) -> None:
+        launches = 0
         for si, seq in enumerate(self.slots):
             if seq is None or seq.phase != "prefill":
                 continue
+            launches += 1
             toks = seq.entry.tokens
             n = len(toks)
             take = min(self.chunk, n - seq.pos)
@@ -245,6 +258,8 @@ class Scheduler:
             seq.pos = n
             first = int(jnp.argmax(logits[0, take - 1]))
             self._emit(si, first)
+        if launches:
+            self.tick_prefill.append(launches)
 
     # -- decode growth / preemption --------------------------------------
     def _release_seq(self, seq: _Seq) -> None:

@@ -139,16 +139,31 @@ def amortized_decode_latency(n_active: int, rcw: bool = True,
 
 def scheduler_amortization_report(active_counts, rcw: bool = True,
                                   fusion: bool = True,
-                                  ctx: int = 1024) -> Dict[str, float]:
+                                  ctx: int = 1024,
+                                  prefill_counts=None) -> Dict[str, float]:
     """Realized weight-stream amortization for a scheduler run.
     ``active_counts`` is the per-decode-tick number of active slots
     (``serve.paged.Scheduler.tick_active``). Returns the occupancy, the
     modeled amortized throughput, and the speedup over serving the same
-    tokens at batch 1 (where every token pays the full stream)."""
+    tokens at batch 1 (where every token pays the full stream).
+
+    ``prefill_counts`` (``Scheduler.tick_prefill``) is the per-tick
+    number of chunk-prefill kernel launches — one per prefilling slot,
+    each a single ``paged_flash_prefill`` dispatch since PR 6. The
+    report measures prefill batching the same way decode amortization
+    is measured: mean launches per prefill tick is the occupancy of the
+    prefill phase of the interleaved schedule (DESIGN.md §11)."""
     counts = [int(c) for c in active_counts if c > 0]
+    pre = [int(c) for c in (prefill_counts or []) if c > 0]
+    prefill = {
+        "prefill_ticks": len(pre),
+        "prefill_launches": sum(pre),
+        "mean_prefill_launches": (sum(pre) / len(pre)) if pre else 0.0,
+    }
     if not counts:
         return {"ticks": 0, "tokens": 0, "mean_active": 0.0,
-                "amortized_tokens_per_s": 0.0, "speedup_vs_b1": 1.0}
+                "amortized_tokens_per_s": 0.0, "speedup_vs_b1": 1.0,
+                **prefill}
     tokens = sum(counts)
     total_t = sum(n * amortized_decode_latency(n, rcw, fusion, ctx)
                   for n in counts)
@@ -159,6 +174,42 @@ def scheduler_amortization_report(active_counts, rcw: bool = True,
         "mean_active": tokens / len(counts),
         "amortized_tokens_per_s": tokens / total_t,
         "speedup_vs_b1": (tokens * b1) / total_t,
+        **prefill,
+    }
+
+
+def chunk_prefill_residency_report(chunk: int = 32, prefix_tokens: int = 1024,
+                                   max_len: int = 4096, block_size: int = 16,
+                                   chip: RCWCIMChip = RCWCIM
+                                   ) -> Dict[str, float]:
+    """Chunk-prefill kernel-residency row (DESIGN.md §11): HBM traffic
+    for one chunk's attention, dense-oracle vs kernel-resident.
+
+    The PR 5 oracle gathered the block pool into a dense
+    ``(NBMAX·BS, Hkv, D)`` prefix copy per layer — a write + read-back
+    round trip over the VIRTUAL length ``max_len`` regardless of how few
+    tokens were actually written — then materialized the ``(C, max_len)``
+    score matrix. The paged flash-prefill kernel streams only the
+    written-prefix blocks through VMEM once (block-level causal skip
+    prunes table slots past the prefix) and keeps scores in scratch, so
+    its traffic scales with ``prefix_tokens + chunk``, not ``max_len``.
+    FP16 KV, FP32 scores; per-layer bytes × the Llama GEOM layer count."""
+    H = GEOM.heads
+    D = GEOM.d_model // H
+    kv_tok = 2 * H * D * 2                       # K+V rows, FP16 bytes
+    written = min(-(-(prefix_tokens + chunk) // block_size) * block_size,
+                  max_len)
+    dense = GEOM.layers * (2 * max_len * kv_tok          # densify + read
+                           + 2 * chunk * max_len * H * 4)  # scores out+in
+    resident = GEOM.layers * written * kv_tok            # stream once
+    bw = chip.dram_gbps * 1e9
+    return {
+        "chunk": chunk, "prefix_tokens": prefix_tokens, "max_len": max_len,
+        "dense_oracle_bytes": float(dense),
+        "kernel_resident_bytes": float(resident),
+        "traffic_reduction": 1 - resident / dense,
+        "dense_oracle_ms": dense / bw * 1e3,
+        "kernel_resident_ms": resident / bw * 1e3,
     }
 
 

@@ -1,6 +1,7 @@
 """Tier-1 exercise of the benchmark perf rows: the smoke gate must run
-the PR 3 fused rows and the PR 5 paged-serving rows end-to-end and
-write BENCH_pr3.json / BENCH_pr5.json."""
+the PR 3 fused rows, the PR 5 paged-serving rows, and the PR 6
+chunked-prefill kernelization rows end-to-end and write
+BENCH_pr3.json / BENCH_pr5.json / BENCH_pr6.json."""
 import json
 import os
 import subprocess
@@ -10,11 +11,17 @@ from pathlib import Path
 ROOT = Path(__file__).resolve().parent.parent
 
 
+def _kv(derived):
+    return dict(kv.split("=", 1) for kv in derived.split(";"))
+
+
 def test_bench_smoke_fast_rows(tmp_path):
     out = tmp_path / "BENCH_pr3.json"
     out5 = tmp_path / "BENCH_pr5.json"
+    out6 = tmp_path / "BENCH_pr6.json"
     env = dict(os.environ, PYTHONPATH="src", REPRO_BENCH_JSON=str(out),
-               REPRO_BENCH_PR5_JSON=str(out5))
+               REPRO_BENCH_PR5_JSON=str(out5),
+               REPRO_BENCH_PR6_JSON=str(out6))
     proc = subprocess.run(
         [sys.executable, "benchmarks/smoke.py", "--fast"], cwd=ROOT,
         capture_output=True, text=True, timeout=560, env=env)
@@ -32,8 +39,30 @@ def test_bench_smoke_fast_rows(tmp_path):
     assert eq["fused"] < eq["unfused"], eq
     # PR 5 rows: paged serving must reference measurably fewer KV blocks
     # than the dense slots × max_len allocation at both slot counts
-    rows5 = {r["name"]: dict(kv.split("=") for kv in r["derived"].split(";"))
+    rows5 = {r["name"]: _kv(r["derived"])
              for r in json.loads(out5.read_text())["rows"]}
     for slots in (4, 16):
         got = rows5[f"paged_paged_tok_s_slots{slots}"]
         assert int(got["peak_kv_blocks"]) < int(got["dense_equiv_blocks"]), got
+    # PR 6 rows: paged flash prefill must beat the PR 5 dense-oracle
+    # chunk path on wall-clock at slots 4 and 16, op-level AND through
+    # the scheduler, with token-identical outputs ...
+    rows6 = {r["name"]: r for r in json.loads(out6.read_text())["rows"]}
+    for slots in (4, 16):
+        attn = _kv(rows6[f"prefill_attn_pagedflash_slots{slots}"]["derived"])
+        assert float(attn["speedup_vs_oracle"].rstrip("x")) > 1.0, attn
+        assert float(attn["maxerr"]) < 1e-5, attn
+        sched = _kv(rows6[f"prefill_sched_flash_slots{slots}"]["derived"])
+        assert float(sched["speedup_vs_oracle"].rstrip("x")) > 1.0, sched
+        assert sched["tokens_identical"] == "True", sched
+    # ... and with no dense KV materialization in the chunk hot loop:
+    # the kernel arm keeps only the LM-head dot_general and drops the
+    # oracle's densify gathers (the §11 residency invariant, counted)
+    disp = {t: _kv(rows6[f"prefill_dispatch_{t}"]["derived"])
+            for t in ("kernel", "oracle")}
+    assert int(disp["kernel"]["dot_general"]) == 1, disp
+    assert int(disp["kernel"]["pallas_calls"]) > 0, disp
+    assert int(disp["oracle"]["dot_general"]) \
+        - int(disp["kernel"]["dot_general"]) == 2, disp
+    assert int(disp["oracle"]["gather"]) \
+        - int(disp["kernel"]["gather"]) >= 2, disp

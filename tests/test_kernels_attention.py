@@ -1,5 +1,7 @@
 """Flash-attention kernel vs the exact oracle: causal, windowed (local),
-GQA head sharing, cross-attention, LUT-exp mode, dtype sweep."""
+GQA head sharing, cross-attention, LUT-exp mode, dtype sweep, and the
+PR 6 offset-causal mode (per-batch absolute ``q_offset`` for chunked
+prefill, DESIGN.md §11)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -68,3 +70,62 @@ def test_block_size_invariance(rng):
     b = flash_attention(q, k, v, causal=True, block_q=64, block_k=16,
                         interpret=True)
     np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Offset-causal mode (chunked prefill, DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("offs", [[0, 32], [17, 96 - 32], [5, 5]])
+def test_offset_causal_flash_vs_ref(rng, offs):
+    """Per-batch absolute query offsets: queries at q_offset[b]+i over a
+    longer written prefix, masked offset-causally."""
+    q, k, v = _qkv(rng, 2, 4, 2, 32, 96, 32)
+    off = jnp.asarray(offs, jnp.int32)
+    got = flash_attention(q, k, v, causal=True, q_offset=off,
+                          block_q=16, block_k=32, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True, q_offset=off)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_offset_causal_composes_with_window(rng):
+    q, k, v = _qkv(rng, 2, 4, 2, 32, 128, 32)
+    off = jnp.asarray([40, 8], jnp.int32)
+    got = flash_attention(q, k, v, causal=True, window=24, q_offset=off,
+                          block_q=16, block_k=32, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True, window=24, q_offset=off)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_offset_causal_lut_close_to_exact(rng):
+    """LUT mode under the flash running rescale agrees with the exact
+    oracle only to LUT tolerance (DESIGN.md §11)."""
+    q, k, v = _qkv(rng, 1, 2, 2, 32, 64, 32)
+    off = jnp.asarray([20], jnp.int32)
+    got = flash_attention(q, k, v, causal=True, use_lut=True, q_offset=off,
+                          block_q=16, block_k=16, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True, q_offset=off)
+    assert float(jnp.abs(got - want).max()) < 2e-2
+
+
+def test_offset_block_size_invariance(rng):
+    q, k, v = _qkv(rng, 1, 2, 1, 64, 128, 32)
+    off = jnp.asarray([30], jnp.int32)
+    a = flash_attention(q, k, v, causal=True, q_offset=off,
+                        block_q=16, block_k=64, interpret=True)
+    b = flash_attention(q, k, v, causal=True, q_offset=off,
+                        block_q=64, block_k=16, interpret=True)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_offset_default_equals_trailing_queries(rng):
+    """q_offset = Sk - Sq is the legacy rectangular-causal case: the
+    explicit offset must reproduce the default path bit-for-bit (the
+    wrapper feeds the same off operand either way)."""
+    q, k, v = _qkv(rng, 2, 4, 2, 32, 96, 32)
+    off = jnp.full((2,), 96 - 32, jnp.int32)
+    a = flash_attention(q, k, v, causal=True, q_offset=off,
+                        block_q=32, block_k=32, interpret=True)
+    b = flash_attention(q, k, v, causal=True,
+                        block_q=32, block_k=32, interpret=True)
+    assert (np.asarray(a) == np.asarray(b)).all()

@@ -1,16 +1,19 @@
-"""Paged-KV serving subsystem (DESIGN.md §10): block-pool bookkeeping,
-the paged fused decode kernel vs its jnp oracle, pool write/gather
-round-trips, and token-for-token equivalence of the chunked-prefill
-Scheduler against ``Engine.generate`` on dense / MoE / VLM configs with
-skewed prompt lengths, shared prefixes, and preemption."""
+"""Paged-KV serving subsystem (DESIGN.md §10/§11): block-pool
+bookkeeping, the paged fused decode kernel vs its jnp oracle, the paged
+flash-prefill kernel vs its oracles, pool write/gather round-trips,
+token-for-token equivalence of the chunked-prefill Scheduler against
+``Engine.generate`` on dense / MoE / VLM configs with skewed prompt
+lengths, shared prefixes, and preemption, and the PR 6 chunk-step
+dispatch accounting (kernel-resident prefill hot loop)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.kernels import ref
+from repro.kernels import ops, ref
 from repro.kernels.paged_attention_decode import paged_attention_decode
+from repro.kernels.paged_flash_prefill import paged_flash_prefill
 from repro.models import api
 from repro.models import layers as L
 from repro.serve.batching import ContinuousBatcher, Request
@@ -131,6 +134,90 @@ def test_paged_ref_matches_dense_composition(rng):
     got = ref.paged_attention_decode_ref(q, kp, vp, bt, lengths,
                                          group_size=64, use_lut=False)
     assert (np.asarray(got) == np.asarray(want)).all()
+
+
+# ---------------------------------------------------------------------------
+# Paged flash-prefill kernel vs oracles (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("starts,window", [([25, 48], None), ([0, 32], None),
+                                           ([25, 48], 20)])
+def test_paged_flash_prefill_kernel_vs_oracle(rng, starts, window):
+    B, H, Hkv, D, NB, BS, NBMAX, C = 2, 4, 2, 32, 12, 16, 4, 16
+    q = jnp.asarray(rng.standard_normal((B, H, C, D)).astype(np.float32))
+    kp, vp, bt = _paged_kv(rng, B, Hkv, D, NB, BS, NBMAX, [64, 64])
+    st = jnp.asarray(starts, jnp.int32)
+    got = paged_flash_prefill(q, kp, vp, bt, st, window=window,
+                              interpret=True)
+    want = ref.paged_flash_prefill_ref(q, kp, vp, bt, st, window=window)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+    scan = ref.paged_flash_prefill_scan_ref(q, kp, vp, bt, st,
+                                            window=window)
+    np.testing.assert_allclose(scan, want, rtol=2e-5, atol=2e-5)
+
+
+def test_paged_flash_prefill_multi_qblock_and_gqa(rng):
+    """C spanning several q blocks, H > Hkv head sharing."""
+    B, H, Hkv, D, NB, BS, NBMAX, C = 2, 8, 2, 32, 12, 16, 5, 32
+    q = jnp.asarray(rng.standard_normal((B, H, C, D)).astype(np.float32))
+    kp, vp, bt = _paged_kv(rng, B, Hkv, D, NB, BS, NBMAX, [80, 80])
+    st = jnp.asarray([13, 48], jnp.int32)
+    got = paged_flash_prefill(q, kp, vp, bt, st, block_q=16,
+                              interpret=True)
+    want = ref.paged_flash_prefill_ref(q, kp, vp, bt, st)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_paged_flash_prefill_lut_tolerance(rng):
+    """LUT mode under the flash running rescale: agrees with the exact
+    oracle only to LUT tolerance (DESIGN.md §11)."""
+    B, H, Hkv, D, NB, BS, NBMAX, C = 1, 2, 2, 32, 8, 16, 4, 16
+    q = jnp.asarray(rng.standard_normal((B, H, C, D)).astype(np.float32))
+    kp, vp, bt = _paged_kv(rng, B, Hkv, D, NB, BS, NBMAX, [64])
+    st = jnp.asarray([30], jnp.int32)
+    got = paged_flash_prefill(q, kp, vp, bt, st, use_lut=True,
+                              interpret=True)
+    want = ref.paged_flash_prefill_ref(q, kp, vp, bt, st)
+    assert float(jnp.abs(got - want).max()) < 2e-2
+    scan = ref.paged_flash_prefill_scan_ref(q, kp, vp, bt, st, use_lut=True)
+    assert float(jnp.abs(scan - want).max()) < 2e-2
+
+
+def test_paged_flash_oracle_is_pr5_chunk_path(rng):
+    """The golden oracle IS the PR 5 composition: gather the pool dense,
+    run the exact materialized offset-causal oracle — bit-for-bit (the
+    Scheduler token-identity chain rests on this)."""
+    B, H, Hkv, D, NB, BS, NBMAX, C = 2, 4, 2, 16, 10, 8, 8, 8
+    q = jnp.asarray(rng.standard_normal((B, H, C, D)).astype(np.float32))
+    kp, vp, bt = _paged_kv(rng, B, Hkv, D, NB, BS, NBMAX, [40, 24])
+    st = jnp.asarray([12, 7], jnp.int32)
+    kg = jnp.swapaxes(ref.gather_paged_kv_ref(kp, bt), 1, 2)
+    vg = jnp.swapaxes(ref.gather_paged_kv_ref(vp, bt), 1, 2)
+    want = ref.attention_ref(q, kg, vg, causal=True, q_offset=st)
+    got = ref.paged_flash_prefill_ref(q, kp, vp, bt, st)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def test_untileable_chunk_raises_instead_of_densifying():
+    """Satellite 1: on the kernel path, shapes the grid cannot tile must
+    RAISE, not silently fall back to the dense oracle."""
+    rng = np.random.default_rng(0)
+    B, H, Hkv, D = 1, 2, 2, 32
+    q = jnp.asarray(rng.standard_normal((B, H, 24, D)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((B, Hkv, 48, D)).astype(np.float32))
+    off = jnp.asarray([10], jnp.int32)
+    kp, vp, bt = _paged_kv(rng, B, Hkv, D, 8, 16, 4, [48])
+    ops.force_pallas(True)
+    try:
+        with pytest.raises(ValueError, match="densify"):
+            ops.attention(q, k, k, q_offset=off, block_q=16, block_k=16)
+        with pytest.raises(ValueError, match="densify"):
+            ops.paged_flash_prefill(q, kp, vp, bt, off, block_q=16)
+        # dividing block sizes pass through to the kernels
+        ops.attention(q, k, k, q_offset=off, block_q=8, block_k=16)
+        ops.paged_flash_prefill(q[:, :, :16], kp, vp, bt, off)
+    finally:
+        ops.force_pallas(None)
 
 
 # ---------------------------------------------------------------------------
@@ -337,3 +424,75 @@ def test_prefix_cache_shares_blocks_across_requests(rng):
     # most the private tail + decode blocks, not a full re-prefill
     assert sch.pool.peak_in_use <= used_after_first + 2
     assert done0[0] == refs[0]
+
+
+# ---------------------------------------------------------------------------
+# PR 6: kernelized chunk-prefill path through the Scheduler
+# ---------------------------------------------------------------------------
+
+def test_scheduler_scan_lowering_token_identical_to_oracle(rng, monkeypatch):
+    """Satellite 6: the chunk step feeds the block table straight to
+    ``ops.paged_flash_prefill``. Its opt-in O(written-prefix) scan
+    lowering (REPRO_OPT_PAGEDFLASH=1) must produce token-identical greedy
+    outputs vs the PR 5 materialized-gather path (REPRO_CHUNK_ORACLE=1)
+    AND vs the dense Engine."""
+    cfg = get_config("llama2-7b", smoke=True).replace(dtype=jnp.float32,
+                                                      num_layers=2)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    sysp = rng.integers(1, cfg.vocab_size, size=18).tolist()
+    prompts = [sysp + rng.integers(1, cfg.vocab_size, size=n).tolist()
+               for n in (3, 21, 9)]
+    news = [5, 6, 4]
+    refs = _engine_refs(cfg, params, prompts, news, max_len=96)
+    monkeypatch.setenv("REPRO_CHUNK_ORACLE", "1")
+    oracle, _ = _run_sched(cfg, params, prompts, news, slots=3, max_len=96,
+                           block_size=8, chunk=16)
+    monkeypatch.delenv("REPRO_CHUNK_ORACLE")
+    monkeypatch.setenv("REPRO_OPT_PAGEDFLASH", "1")
+    scan, sch = _run_sched(cfg, params, prompts, news, slots=3, max_len=96,
+                           block_size=8, chunk=16)
+    assert scan == oracle == refs
+    # the amortization report now carries the per-tick prefill launches
+    amort = sch.stream_amortization_report()
+    assert amort["prefill_launches"] >= len(prompts)
+    assert amort["mean_prefill_launches"] >= 1.0
+
+
+def test_prefill_eqn_count_kernel_residency(monkeypatch):
+    """PR 6 acceptance: on the kernel path the chunked-prefill hot loop
+    issues ZERO non-Pallas attention/matmul dispatches across dense /
+    MoE / VLM — dense & VLM traces keep exactly one dot_general (the LM
+    head, outside the layer loop; MoE adds only its non-quantized expert
+    routing einsums) and the oracle arm's extra dispatches are exactly
+    the 2 attention einsums (QK, PV) and the 2-per-pool densify gathers
+    the kernel eliminates."""
+    from repro.serve.engine import quantize_params
+    for name, extra, inherent_dots in (
+            ("llama2-7b", {}, 1),             # the LM head only
+            ("dbrx-132b", {"capacity_factor": 8.0}, None),  # + expert mix
+            ("qwen2-vl-2b", {}, 1)):
+        cfg = get_config(name, smoke=True).replace(
+            dtype=jnp.float32, quant_mode="w4a8", use_lut_softmax=True,
+            **extra)
+        params = quantize_params(api.init(jax.random.PRNGKey(0), cfg), cfg)
+        ops.force_pallas(True)
+        try:
+            eng = Engine(cfg, params, max_len=64)
+            kern = {p: eng.prefill_eqn_count(chunk=16, primitive=p)
+                    for p in ("pallas_call", "dot_general", "gather")}
+            monkeypatch.setenv("REPRO_CHUNK_ORACLE", "1")
+            eng_o = Engine(cfg, params, max_len=64)
+            orac = {p: eng_o.prefill_eqn_count(chunk=16, primitive=p)
+                    for p in ("dot_general", "gather")}
+            monkeypatch.delenv("REPRO_CHUNK_ORACLE")
+        finally:
+            ops.force_pallas(None)
+        assert kern["pallas_call"] > 0, name
+        if inherent_dots is not None:
+            assert kern["dot_general"] == inherent_dots, (name, kern)
+        # the kernel eliminates exactly the oracle's QK/PV einsums ...
+        assert orac["dot_general"] - kern["dot_general"] == 2, (name, orac)
+        # ... and its dense K/V materialization gathers (per pool, both
+        # the table→flat-index and the pool-row gather): no dense KV on
+        # the kernel path, prefix-cache hits stay paged
+        assert orac["gather"] - kern["gather"] >= 2, (name, orac)

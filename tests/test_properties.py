@@ -1,6 +1,7 @@
 """Hypothesis property tests on the system's invariants: quantization
 round-trips, dataflow access-count algebra (Table I), RCW pipeline
-bounds, LUT softmax behavior."""
+bounds, LUT softmax behavior, and the offset-causal flash kernel vs the
+golden ``ref.attention_ref(q_offset=)`` oracle (DESIGN.md §11)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -15,6 +16,8 @@ from repro.core.dataflow import (Dataflow, TileConfig, access_counts,
 from repro.core.quant import (QuantConfig, pack_int4, quantize_int8,
                               quantize_weight, unpack_int4)
 from repro.core.rcw import latency_rcw, latency_serial, latency_uniform, RCWStage
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
 
 S = settings(max_examples=25, deadline=None)
 
@@ -113,6 +116,33 @@ def test_rcw_nonuniform_consistency(fills, computes):
     n = min(len(fills), len(computes))
     stages = [RCWStage(fills[i], computes[i]) for i in range(n)]
     assert latency_rcw(stages) <= latency_serial(stages) + 1e-9
+
+
+@settings(max_examples=12, deadline=None)    # interpret-mode kernel runs
+@given(st.integers(0, 2**31 - 1),            # data + per-batch offsets
+       st.sampled_from([(16, 32), (16, 64), (32, 64)]),   # (Sq=C, Sk)
+       st.sampled_from([None, 12, 40]),      # sliding-window half-width
+       st.booleans())                        # LUT vs exact exp
+def test_offset_causal_flash_matches_oracle(seed, shape, window, use_lut):
+    """Satellite sweep: q_offset × sliding-window × softmax mode. The
+    offset-causal flash kernel must reproduce the golden materialized
+    oracle ``ref.attention_ref(q_offset=)`` — to fp32 round-off in
+    exact-exp mode, to LUT tolerance under the LUT running rescale
+    (DESIGN.md §11)."""
+    C, Sk = shape
+    B, H, Hkv, D = 2, 4, 2, 32
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((B, H, C, D)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((B, Hkv, Sk, D)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((B, Hkv, Sk, D)).astype(np.float32))
+    off = jnp.asarray(rng.integers(0, Sk - C + 1, size=B), jnp.int32)
+    got = flash_attention(q, k, v, causal=True, window=window,
+                          use_lut=use_lut, q_offset=off,
+                          block_q=16, block_k=16, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True, window=window,
+                             q_offset=off)
+    err = float(jnp.abs(got - want).max())
+    assert err < (2e-2 if use_lut else 1e-5)
 
 
 @S
