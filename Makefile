@@ -3,10 +3,10 @@
 
 PY ?= python
 
-.PHONY: test bench bench-fast bench-prefill
+.PHONY: test bench bench-fast bench-prefill bench-spec bench-report
 
 test:
-	PYTHONPATH=src $(PY) -m pytest -x -q
+	PYTHONPATH=src $(PY) -m pytest -x -q --durations=10
 
 bench:
 	PYTHONPATH=src $(PY) benchmarks/smoke.py
@@ -18,3 +18,12 @@ bench-fast:
 bench-prefill:
 	PYTHONPATH=src:benchmarks $(PY) -c "import run; \
 	  run.run_benches([run.bench_prefill]); run.write_json(run.PR6_JSON)"
+
+# PR 7 speculative/beam rows only, written to the canonical BENCH_pr7.json
+bench-spec:
+	PYTHONPATH=src:benchmarks $(PY) -c "import run; \
+	  run.run_benches([run.bench_spec]); run.write_json(run.PR7_JSON)"
+
+# perf trajectory across all BENCH_pr*.json artifacts
+bench-report:
+	$(PY) benchmarks/compare.py

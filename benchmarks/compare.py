@@ -1,0 +1,107 @@
+"""Perf-trajectory report across the stacked PR benchmark artifacts.
+
+Loads every ``BENCH_pr*.json`` in the repo root (the canonical
+artifacts written by ``benchmarks/run.py`` — one per perf PR, plus
+their ``.fast`` CI mirrors when present) and prints:
+
+* a per-artifact summary: row count and the headline rows (anything
+  whose derived payload carries a throughput/speedup/reduction figure),
+* a trajectory table of those headline metrics in PR order, so "what
+  did each perf PR actually buy" is one ``make bench-report`` away
+  instead of a JSON spelunking session.
+
+Artifacts are data, not code: missing files are skipped with a note
+(e.g. a fresh clone before ``make bench`` has none), and unknown row
+shapes fall back to raw display rather than crashing the report.
+"""
+from __future__ import annotations
+
+import json
+import re
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# derived-payload keys worth surfacing in the trajectory (ordered by
+# how often people ask for them)
+HEADLINE_KEYS = (
+    "tok_s", "speedup_vs_base", "speedup_vs_oracle", "speedup_vs_b1",
+    "speedup", "reduction", "traffic_reduction", "tokens_per_pass",
+    "accepted_frac", "peak_kv_blocks", "ratio", "flat_in_k",
+    "tokens_identical",
+)
+
+
+def _pr_key(path: Path) -> tuple:
+    """Sort BENCH_pr5.json before BENCH_pr10.json, .fast after full."""
+    m = re.search(r"pr(\d+)", path.name)
+    return (int(m.group(1)) if m else 0, ".fast" in path.name)
+
+
+def parse_derived(derived: str) -> Dict[str, str]:
+    """'a=1;b=2.0x;note' → {'a': '1', 'b': '2.0x'} (bare notes dropped)."""
+    out: Dict[str, str] = {}
+    for part in str(derived).split(";"):
+        if "=" in part:
+            k, v = part.split("=", 1)
+            out[k.strip()] = v.strip()
+    return out
+
+
+def load_artifacts(root: Path = ROOT) -> "List[tuple]":
+    arts = []
+    for path in sorted(root.glob("BENCH_pr*.json"), key=_pr_key):
+        try:
+            rows = json.loads(path.read_text()).get("rows", [])
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"# skipping {path.name}: {e}")
+            continue
+        arts.append((path.name, rows))
+    return arts
+
+
+def headline_rows(rows: List[dict]) -> List[dict]:
+    picked = []
+    for r in rows:
+        kv = parse_derived(r.get("derived", ""))
+        if any(k in kv for k in HEADLINE_KEYS):
+            picked.append(r)
+    return picked
+
+
+def trajectory_table(arts) -> List[str]:
+    """One line per headline metric: artifact, row, metric, value."""
+    lines = [f"{'artifact':<22} {'row':<38} {'metric':<18} value",
+             "-" * 90]
+    for name, rows in arts:
+        for r in headline_rows(rows):
+            kv = parse_derived(r.get("derived", ""))
+            for k in HEADLINE_KEYS:
+                if k in kv:
+                    lines.append(f"{name:<22} {r['name']:<38} "
+                                 f"{k:<18} {kv[k]}")
+    return lines
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    root = Path(argv[0]) if argv else ROOT
+    arts = load_artifacts(root)
+    if not arts:
+        print(f"# no BENCH_pr*.json under {root} — run `make bench` first")
+        return 0
+    for name, rows in arts:
+        picks = headline_rows(rows)
+        print(f"\n== {name}: {len(rows)} rows, "
+              f"{len(picks)} headline ==")
+        for r in picks:
+            print(f"  {r['name']},{r['us_per_call']},{r['derived']}")
+    print("\n== perf trajectory ==")
+    for line in trajectory_table(arts):
+        print(line)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -41,6 +41,10 @@ PR5_JSON = Path(os.environ.get(
 PR6_JSON = Path(os.environ.get(
     "REPRO_BENCH_PR6_JSON",
     Path(__file__).resolve().parent.parent / "BENCH_pr6.json"))
+# PR 7 rows (speculative / beam decoding on COW block tables) likewise
+PR7_JSON = Path(os.environ.get(
+    "REPRO_BENCH_PR7_JSON",
+    Path(__file__).resolve().parent.parent / "BENCH_pr7.json"))
 _ROWS = []
 
 
@@ -489,9 +493,128 @@ def bench_prefill() -> None:
          f"traffic_reduction={r['traffic_reduction']:.3f}")
 
 
+def bench_spec() -> None:
+    """PR 7 rows (BENCH_pr7.json): speculative decoding on copy-on-write
+    block tables — tokens per weight-stream pass.
+
+    ``spec_sched_*`` is the headline sweep: the paged Scheduler on a
+    decode-heavy workload at slots ∈ {4, 16}, non-speculative baseline
+    (the PR 6 configuration) vs k=4 oracle-draft speculation across
+    acceptance rates. The oracle draft is free by construction, so the
+    sweep isolates the verify-path economics: one k+1-wide
+    ``api.verify_step`` dispatch replaces up to k+1 one-token decode
+    dispatches, with every arm asserted token-identical to the baseline.
+    ``spec_verify_dispatch`` shows the count that makes this work — the
+    verify pass's jaxpr is flat in k. ``spec_model_*`` rows are the
+    analytic counterpart (``pm.speculative_decode_latency``): on the
+    modeled chip the stream term is already divided by the active slots,
+    so speculation's win comes from amortizing it over accepted tokens
+    and the sweep locates the acceptance crossover where the (k+1)×
+    MAC/NL inflation eats the saving. ``spec_beam_*`` rows measure the
+    other COW consumer: n-best forking's peak KV blocks vs n independent
+    streams."""
+    from repro.configs import get_config
+    from repro.models import api
+    from repro.serve.batching import Request
+    from repro.serve.engine import Engine
+    from repro.serve.paged import Scheduler
+    from repro.serve.spec_decode import OracleDraft, SpecConfig
+
+    cfg = get_config("llama2-7b", smoke=True).replace(
+        dtype=jnp.float32, num_layers=2, d_model=64, num_heads=2,
+        num_kv_heads=2, d_ff=128, vocab_size=256)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    max_len, bs, k, new = 256, 16, 4, 48
+    lens = [12, 24, 16, 28, 20, 12, 16, 24, 12, 20, 28, 16, 24, 12, 20, 16]
+    reqs = [rng.integers(1, cfg.vocab_size, size=n).tolist() for n in lens]
+
+    def run_arm(slots, spec):
+        """One scheduler per arm: warm run compiles the jitted steps
+        (each Scheduler owns fresh jit closures), timed run re-submits
+        the same workload against the warm jits — the measurement is
+        steady-state serving, not tracing."""
+        sch = Scheduler(cfg, params, slots=slots, max_len=max_len,
+                        block_size=bs, chunk=16, prefix_cache=False,
+                        spec=spec)
+
+        def once():
+            for i, p in enumerate(reqs):
+                sch.submit(Request(rid=i, prompt=p, max_new=new))
+            return sch.run()
+
+        once()
+        t0 = time.perf_counter()
+        done = once()
+        return time.perf_counter() - t0, done, sch
+
+    toks = len(reqs) * new
+    for slots in (4, 16):
+        t_base, base, _ = run_arm(slots, None)
+        _row(f"spec_sched_base_slots{slots}", t_base * 1e6,
+             f"tok_s={toks / t_base:.1f};k=0")
+        refseqs = {(i, 0): reqs[i] + base[i] for i in range(len(reqs))}
+        for rate in (0.3, 0.5, 0.7, 0.9, 1.0):
+            spec = SpecConfig(draft=OracleDraft(
+                refseqs, accept_rate=rate, vocab_size=cfg.vocab_size), k=k)
+            t, done, sch = run_arm(slots, spec)
+            assert done == base, "speculative arm diverged from baseline"
+            rep = sch.spec_report()
+            # dialed = the per-position draft-match probability α;
+            # accepted/drafted runs lower because every pass re-drafts
+            # the positions behind its first mismatch
+            _row(f"spec_sched_a{int(rate * 100):03d}_slots{slots}",
+                 t * 1e6,
+                 f"tok_s={toks / t:.1f};k={k};dialed={rate:.2f};"
+                 f"speedup_vs_base={t_base / t:.2f}x;"
+                 f"accepted_frac={rep['accept_rate']:.2f};"
+                 f"tokens_per_pass={rep['tokens_per_pass']:.2f};"
+                 f"tokens_identical=True")
+
+    # ---- beam forking: peak KV blocks, n forks vs n streams ----------
+    # prompt-heavy regime: the prompt is stored once across forks, each
+    # fork privatizes only its COW'd tail + generated blocks. The
+    # prompt length is deliberately NOT block-aligned so the shared
+    # partial tail block forces a copy-on-write per fork (cow_copies>0).
+    nb, beam_new = 4, 16
+    prompt = rng.integers(1, cfg.vocab_size, size=90).tolist()
+    sch1 = Scheduler(cfg, params, slots=1, max_len=max_len, block_size=bs,
+                     chunk=16, prefix_cache=False)
+    sch1.submit(Request(rid=0, prompt=prompt, max_new=beam_new))
+    sch1.run()
+    schn = Scheduler(cfg, params, slots=nb, max_len=max_len, block_size=bs,
+                     chunk=16, prefix_cache=False)
+    schn.submit(Request(rid=0, prompt=prompt, max_new=beam_new, n_best=nb))
+    schn.run()
+    _row("spec_beam_fork_blocks", 0.0,
+         f"n_best={nb};peak_blocks={schn.pool.peak_in_use};"
+         f"single_stream_blocks={sch1.pool.peak_in_use};"
+         f"ratio={schn.pool.peak_in_use / sch1.pool.peak_in_use:.2f};"
+         f"cow_copies={schn.pool.cow_copies}")
+
+    # ---- dispatch accounting: verify jaxpr flat in k -----------------
+    eng = Engine(cfg, params, max_len=64)
+    t0 = time.perf_counter()
+    counts = {kk: eng.verify_eqn_count(batch=4, k=kk) for kk in (1, 4, 7)}
+    us = (time.perf_counter() - t0) * 1e6
+    _row("spec_verify_dispatch", us,
+         f"eqns_k1={counts[1]};eqns_k4={counts[4]};eqns_k7={counts[7]};"
+         f"flat_in_k={counts[1] == counts[4] == counts[7]}")
+
+    # ---- analytic speculation-adjusted decode latency ----------------
+    for slots in (4, 16):
+        base_us = pm.amortized_decode_latency(slots) * 1e6
+        sweep = ";".join(
+            f"a{int(r * 100):03d}="
+            f"{base_us / (pm.speculative_decode_latency(slots, k, r) * 1e6):.2f}x"
+            for r in (0.3, 0.5, 0.7, 0.9, 1.0))
+        _row(f"spec_model_speedup_slots{slots}", 0.0,
+             f"k={k};amortized_us={base_us:.1f};{sweep}")
+
+
 ALL_BENCHES = [bench_table1, bench_fig8, bench_fig9, bench_table2,
                bench_kernels, bench_fused, bench_decode_dispatch,
-               bench_paged, bench_prefill]
+               bench_paged, bench_prefill, bench_spec]
 
 
 def run_benches(benches, keep_going: bool = False):
@@ -517,7 +640,8 @@ def write_json(target=None) -> Path:
     target.write_text(json.dumps({"rows": _ROWS}, indent=2) + "\n")
     print(f"# wrote {target}")
     for prefix, tag, default in (("paged_", "pr5", PR5_JSON),
-                                 ("prefill_", "pr6", PR6_JSON)):
+                                 ("prefill_", "pr6", PR6_JSON),
+                                 ("spec_", "pr7", PR7_JSON)):
         rows = [r for r in _ROWS if r["name"].startswith(prefix)]
         if not rows or target == default:   # already the canonical artifact
             continue

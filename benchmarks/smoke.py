@@ -5,8 +5,9 @@ row raises — so the perf harness stays green in tier-1 workflows
 Usage: PYTHONPATH=src python benchmarks/smoke.py [--fast]
   --fast  only the acceptance-gated row groups: the PR 3 fused-vs-unfused
           rows + dispatch-count metric, the PR 5 paged-vs-dense serving
-          rows (BENCH_pr5.fast.json), and the PR 6 chunked-prefill
-          kernelization rows (BENCH_pr6.fast.json)
+          rows (BENCH_pr5.fast.json), the PR 6 chunked-prefill
+          kernelization rows (BENCH_pr6.fast.json), and the PR 7
+          speculative-decoding rows (BENCH_pr7.fast.json)
 """
 from __future__ import annotations
 
@@ -19,7 +20,7 @@ import run  # benchmarks/run.py (same directory when run as a script)
 def main(argv) -> int:
     fast = "--fast" in argv
     benches = [run.bench_fused, run.bench_decode_dispatch,
-               run.bench_paged, run.bench_prefill] if fast \
+               run.bench_paged, run.bench_prefill, run.bench_spec] if fast \
         else run.ALL_BENCHES
     # fast mode must not clobber the full-row artifact (unless the
     # caller redirected the output explicitly)

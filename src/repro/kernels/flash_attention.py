@@ -112,7 +112,13 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     rep = H // Hkv
     bq = min(block_q, Sq)
     bk = min(block_k, Sk)
-    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    if Sq % bq != 0 or Sk % bk != 0:
+        raise ValueError(
+            f"flash_attention: grid cannot tile q {tuple(q.shape)} / "
+            f"k {tuple(k.shape)} — chose block_q={bq} (requested "
+            f"{block_q}) for Sq={Sq}, block_k={bk} (requested "
+            f"{block_k}) for Sk={Sk}; pad the sequences to multiples "
+            "of the block sizes")
     assert q_offset is None or causal, "q_offset requires causal masking"
     scale = scale if scale is not None else D ** -0.5
 

@@ -185,10 +185,13 @@ def attention(q, k, v, *, causal=True, window=None, use_lut=False,
             bq, bk = min(block_q, Sq), min(block_k, Sk)
             if Sq % bq != 0 or Sk % bk != 0:
                 raise ValueError(
-                    f"attention(q_offset=): grid cannot tile Sq={Sq}/"
-                    f"block_q={bq}, Sk={Sk}/block_k={bk}; pad the chunk "
-                    "or pass dividing block sizes (the hot loop must not "
-                    "densify)")
+                    f"attention(q_offset=): grid cannot tile q "
+                    f"{tuple(q.shape)} / k {tuple(k.shape)} — chose "
+                    f"block_q={bq} (requested {block_q}) for Sq={Sq}, "
+                    f"block_k={bk} (requested {block_k}) for Sk={Sk}, "
+                    f"but Sq % block_q == {Sq % bq} and Sk % block_k == "
+                    f"{Sk % bk}; pad the chunk or pass dividing block "
+                    "sizes (the hot loop must not densify)")
             return _fa.flash_attention(q, k, v, causal=True, window=window,
                                        use_lut=use_lut, scale=scale,
                                        block_q=block_q, block_k=block_k,
@@ -230,9 +233,11 @@ def paged_flash_prefill(q, k_pool, v_pool, block_tables, start, *,
         bq = min(block_q, C)
         if C % bq != 0:
             raise ValueError(
-                f"paged_flash_prefill: grid cannot tile C={C}/"
-                f"block_q={bq}; pad the chunk (the hot loop must not "
-                "densify)")
+                f"paged_flash_prefill: grid cannot tile q "
+                f"{tuple(q.shape)} over pools {tuple(k_pool.shape)} — "
+                f"chose block_q={bq} (requested {block_q}) for chunk "
+                f"C={C}, but C % block_q == {C % bq}; pad the chunk "
+                "(the hot loop must not densify)")
         return _pfp.paged_flash_prefill(
             q, k_pool, v_pool, block_tables, start, window=window,
             use_lut=use_lut, scale=scale, block_q=block_q,

@@ -126,7 +126,12 @@ def paged_flash_prefill(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     rep = H // Hkv
     nbmax = block_tables.shape[1]
     bq = min(block_q, C)
-    assert C % bq == 0, (C, bq)
+    if C % bq != 0:
+        raise ValueError(
+            f"paged_flash_prefill: grid cannot tile q {tuple(q.shape)} "
+            f"over pools {tuple(k_pool.shape)} — chose block_q={bq} "
+            f"(requested {block_q}) for chunk C={C}; pad the chunk to "
+            "a multiple of block_q")
     scale = scale if scale is not None else D ** -0.5
 
     q3 = q.reshape(B * H, C, D)

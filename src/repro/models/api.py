@@ -107,6 +107,30 @@ def serve_step(params: Dict, cfg: ModelConfig, token: jax.Array, cache,
     return family(cfg).decode_step(params, cfg, token, cache, pos_idx)
 
 
+def verify_step(params: Dict, cfg: ModelConfig, tokens: jax.Array, cache,
+                start: jax.Array) -> Tuple[jax.Array, object]:
+    """Speculative-verify step (DESIGN.md §12): score a (B, K+1) batch of
+    [pending token, K drafts] rows against the paged cache in ONE
+    dispatch per op. Structurally this IS a chunked-prefill step — the
+    chunk's K/V is written first, then the offset-causal
+    ``ops.paged_flash_prefill`` attends over the written prefix — so
+    speculative decode inverts the decode chain's one-token-per-dispatch
+    assumption by reusing the prefill kernel path for decode. Row i of
+    the returned (B, K+1, V) logits is the target's next-token
+    distribution after tokens[:, :i+1]; greedy acceptance compares its
+    argmax chain against the drafts (``spec_decode.accept_length``)."""
+    return family(cfg).prefill_chunk(params, cfg, tokens, cache, start)
+
+
+def topn_tokens(logits: jax.Array, n: int) -> jax.Array:
+    """Deterministic n-best first tokens for beam forking: the n highest
+    logits (ties broken toward the lower token id, ``jax.lax.top_k``
+    order) — fork rank r continues from the r-th best token, so forked
+    slots bit-match independently-seeded greedy runs."""
+    _, idx = jax.lax.top_k(logits, n)
+    return idx.astype(jnp.int32)
+
+
 def cache_axes(cfg: ModelConfig):
     """Logical axes tree mirroring init_cache's structure."""
     return family(cfg).cache_axes(cfg)

@@ -1,27 +1,56 @@
-"""Optimization flags (EXPERIMENTS.md §Perf).
+"""Optimization flags (EXPERIMENTS.md §Perf) — and the single reference
+table of every ``REPRO_*`` environment flag in the tree.
 
 The hillclimbed optimizations are framework DEFAULTS; each can be
-disabled for A/B against the paper-faithful baseline:
+disabled for A/B against the paper-faithful baseline. Flags outside the
+``REPRO_OPT_*`` family are read elsewhere (reader noted per row) but
+documented here so there is exactly one place to look.
 
-  REPRO_OPT_FLASH=0    materialized-score attention oracle (baseline)
-  REPRO_OPT_SEQKV=0    head-dim-sharded KV cache (baseline decode layout)
-  REPRO_OPT_EPMODEL=0  experts sharded over "data" (baseline MoE layout)
-  REPRO_OPT_GRADRS=1   pin grads to the param sharding (measured no-op:
-                       GSPMD already propagates it — §Perf, refuted)
-  REPRO_BASELINE=1     all of the above at once
-  REPRO_OPT_EPMOE=1    (refuted ablation) pin dispatched tokens E→"data"
-
-Opt-IN flags (default off — they change off-TPU lowering choices):
-
-  REPRO_OPT_PAGEDFLASH=1  off-TPU chunk-prefill attention lowers to the
-                       O(written-prefix) online-softmax scan instead of
-                       the bit-exact PR 5 gather+oracle (DESIGN.md §11;
-                       matches to fp32 round-off, so the Scheduler's
-                       token-identity default stays the oracle)
-
-Related (read by kernels/ops.py, not here): REPRO_CHUNK_ORACLE=1 pins
-every chunked-prefill attention to the PR 5 materialized gather oracle
-on ALL backends — the rollback switch and the BENCH_pr6 dense arm.
+=====================  =======  =========================================
+flag                   default  meaning (reader)
+=====================  =======  =========================================
+REPRO_OPT_FLASH        1        off-TPU long-seq attention uses the
+                                O(S)-memory flash-scan oracle; 0 = the
+                                materialized-score oracle (here +
+                                kernels/ops.py)
+REPRO_OPT_SEQKV        1        head-dim-sharded KV cache; 0 = baseline
+                                decode layout (here)
+REPRO_OPT_EPMODEL      1        experts sharded over "model"; 0 =
+                                baseline "data" MoE layout (here)
+REPRO_OPT_GRADRS       1        pin grads to the param sharding
+                                (measured no-op: GSPMD already
+                                propagates it — §Perf, refuted) (here)
+REPRO_OPT_EPMOE        0        (refuted ablation) pin dispatched
+                                tokens E→"data" (here)
+REPRO_OPT_PAGEDFLASH   0        off-TPU chunk-prefill/verify attention
+                                lowers to the O(written-prefix)
+                                online-softmax scan instead of the
+                                bit-exact PR 5 gather+oracle
+                                (DESIGN.md §11; matches to fp32
+                                round-off, so the Scheduler's
+                                token-identity default stays the
+                                oracle) (here + kernels/ops.py)
+REPRO_BASELINE         0        1 = force every REPRO_OPT_* flag off at
+                                once (here)
+REPRO_CHUNK_ORACLE     0        1 = pin every chunked-prefill/verify
+                                attention to the PR 5 materialized
+                                gather oracle on ALL backends — the
+                                rollback switch and the BENCH_pr6
+                                dense arm (kernels/ops.py)
+REPRO_FORCE_PALLAS     unset    1 = run the Pallas kernel path in
+                                interpret mode off-TPU; 0 = force the
+                                oracle path on TPU (kernels/ops.py;
+                                tests use ``ops.force_pallas``)
+REPRO_BENCH_JSON       unset    output path override for the full
+                                benchmark artifact, default
+                                BENCH_pr3.json (benchmarks/run.py)
+REPRO_BENCH_PR5_JSON   unset    path override for the paged-serving
+                                row artifact (benchmarks/run.py)
+REPRO_BENCH_PR6_JSON   unset    path override for the chunked-prefill
+                                row artifact (benchmarks/run.py)
+REPRO_BENCH_PR7_JSON   unset    path override for the speculative/beam
+                                row artifact (benchmarks/run.py)
+=====================  =======  =========================================
 """
 import os
 

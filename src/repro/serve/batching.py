@@ -30,6 +30,12 @@ class Request:
     prompt: List[int]
     max_new: int
     eos: Optional[int] = None
+    # n-best parallel sampling (paged Scheduler only, DESIGN.md §12):
+    # after prefill the sequence forks into n_best slots — rank r
+    # greedily continues the r-th best first token — sharing the prompt
+    # KV copy-on-write. The dense ContinuousBatcher ignores it (>1
+    # raises at submit). done[rid] becomes a list of n_best outputs.
+    n_best: int = 1
 
 
 @dataclasses.dataclass
@@ -70,6 +76,8 @@ class ContinuousBatcher:
 
     # -- public API ----------------------------------------------------
     def submit(self, req: Request) -> None:
+        assert req.n_best == 1, \
+            "n-best sampling needs the paged Scheduler (COW forking)"
         self.queue.append(req)
 
     def run(self, max_ticks: int = 10_000) -> Dict[int, List[int]]:

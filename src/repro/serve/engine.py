@@ -156,6 +156,21 @@ class Engine:
         return count_eqns(
             self._prefill_jaxpr(batch, chunk, block_size).jaxpr, primitive)
 
+    def verify_eqn_count(self, batch: int = 1, k: int = 4,
+                         block_size: int = 16,
+                         primitive: Optional[str] = None) -> int:
+        """Op dispatches issued by one speculative-verify pass
+        (``api.verify_step`` over k drafts — structurally a
+        chunked-prefill step with chunk = k+1, DESIGN.md §12). The spec
+        path's economics rest on this count being flat in k: one pass
+        scores k+1 positions through the same dispatch schedule a
+        one-token decode would cost on the prefill path, so accepted
+        drafts multiply tokens per dispatch instead of adding
+        dispatches."""
+        return self.prefill_eqn_count(batch=batch, chunk=k + 1,
+                                      block_size=block_size,
+                                      primitive=primitive)
+
     def generate(self, tokens: np.ndarray, sc: ServeConfig,
                  extra_batch: Optional[Dict] = None) -> np.ndarray:
         """tokens (B, S_prompt) int32 → (B, S_prompt + max_new) int32."""

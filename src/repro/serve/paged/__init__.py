@@ -1,7 +1,9 @@
-"""Paged-KV serving subsystem (DESIGN.md §10): a ref-counted block pool
-with hash-based prefix sharing, and a chunked-prefill scheduler that
-replaces the dense per-slot cache of ``serve.batching`` with block-table
-indirection through the paged fused decode kernel."""
+"""Paged-KV serving subsystem (DESIGN.md §10–§12): a ref-counted block
+pool with hash-based prefix sharing and copy-on-write forking, and a
+chunked-prefill scheduler that replaces the dense per-slot cache of
+``serve.batching`` with block-table indirection through the paged fused
+decode kernel — plus n-best beam forking and k-draft speculative decode
+over the same block tables."""
 from repro.serve.paged.block_pool import KVBlockPool, prefix_hashes
 from repro.serve.paged.scheduler import Scheduler
 

@@ -15,6 +15,20 @@ carry a prefix hash stay *cached*: they keep their contents and remain
 reusable until the allocator evicts them LRU-first when the free list
 runs dry. Unhashed blocks (decode-generated tokens, partial prompt
 tails) return straight to the free list.
+
+Copy-on-write forking (DESIGN.md §12): ``fork`` clones a sequence's
+block table by bumping refcounts — no KV bytes move. A holder may only
+write a block it owns exclusively (``writable``: refcount 1 and not
+published under a prefix hash); before writing a shared block the
+holder calls ``cow`` to trade its reference for a fresh private block
+and copies the contents (the scheduler owns the device-side copy — the
+pool only does the bookkeeping). Beam / parallel sampling and
+speculative rollback are built on these three primitives.
+
+Stats counters (cheap ints, never reset by the pool): ``prefix_hits`` /
+``prefix_misses`` count ``match_prefix`` probes per full block,
+``evictions`` counts cached blocks reclaimed LRU-first by ``alloc``,
+``cow_copies`` counts ``cow`` calls.
 """
 from __future__ import annotations
 
@@ -48,6 +62,10 @@ class KVBlockPool:
         self._block_hash: Dict[int, int] = {}
         self._cached: "OrderedDict[int, None]" = OrderedDict()  # LRU, ref==0
         self.peak_in_use = 0
+        self.prefix_hits = 0
+        self.prefix_misses = 0
+        self.evictions = 0
+        self.cow_copies = 0
 
     # -- accounting ------------------------------------------------------
     @property
@@ -73,6 +91,7 @@ class KVBlockPool:
             bid, _ = self._cached.popitem(last=False)     # LRU eviction
             h = self._block_hash.pop(bid)
             del self._hash_to_block[h]
+            self.evictions += 1
         else:
             return None
         self._ref[bid] = 1
@@ -103,6 +122,45 @@ class KVBlockPool:
         else:
             self._free.append(bid)
 
+    # -- copy-on-write forking (DESIGN.md §12) ---------------------------
+    def refcount(self, bid: int) -> int:
+        return self._ref.get(bid, 0)
+
+    def writable(self, bid: int) -> bool:
+        """True when the caller may scatter into the block in place:
+        exactly one live reference and no published prefix hash (writing
+        a hashed block would poison every future ``match_prefix`` hit,
+        even at refcount 1 — the hash describes the *current* bytes)."""
+        return self._ref.get(bid, 0) == 1 and bid not in self._block_hash
+
+    def fork(self, table: Sequence[int]) -> List[int]:
+        """Clone a block table by reference: every block gains a holder,
+        zero KV bytes move. The clone is read-shared until a holder's
+        first write triggers ``cow`` on the touched block only."""
+        for bid in table:
+            self.retain(bid)
+        return list(table)
+
+    def cow(self, bid: int) -> Optional[int]:
+        """Copy-on-write: trade one reference of a shared ``bid`` for a
+        fresh private block. Returns the new block id (refcount 1) —
+        the CALLER must copy the pool contents ``bid → new`` before its
+        write lands — or None when the pool is dry (caller preempts; the
+        original reference is untouched on failure)."""
+        new = self.alloc()
+        if new is None:
+            return None
+        self.release(bid)
+        self.cow_copies += 1
+        return new
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        return {"prefix_hits": self.prefix_hits,
+                "prefix_misses": self.prefix_misses,
+                "evictions": self.evictions,
+                "cow_copies": self.cow_copies}
+
     # -- prefix cache ----------------------------------------------------
     def is_cached(self, bid: int) -> bool:
         """True for a refcount-0 hashed block (allocatable via eviction —
@@ -124,11 +182,16 @@ class KVBlockPool:
 
     def match_prefix(self, tokens: Sequence[int]) -> List[int]:
         """Longest chain of cached blocks covering the prompt's full
-        blocks, in logical order (stops at the first miss)."""
+        blocks, in logical order (stops at the first miss). Counts one
+        ``prefix_hits`` per matched block and one ``prefix_misses`` for
+        the probe that broke the chain (full blocks past it are never
+        probed — they cannot match without their predecessor)."""
         out = []
         for h in prefix_hashes(tokens, self.block_size):
             bid = self.lookup_prefix(h)
             if bid is None:
+                self.prefix_misses += 1
                 break
+            self.prefix_hits += 1
             out.append(bid)
         return out

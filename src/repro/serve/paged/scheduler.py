@@ -1,10 +1,13 @@
-"""Paged-KV continuous-batching scheduler (DESIGN.md §10).
+"""Paged-KV continuous-batching scheduler (DESIGN.md §10–§12).
 
 Replaces the dense slot loop of ``serve.batching.ContinuousBatcher``:
 
 * **Admission by free-block budget** — a request is admitted when the
   pool can cover its prompt blocks (minus any prefix-cache hits) plus
-  one block of decode headroom; admission is FIFO, no head-of-line skip.
+  one block of decode headroom per eventual fork; admission is FIFO, no
+  head-of-line skip. An ``n_best > 1`` request additionally reserves
+  ``n_best`` slots up front (holds) so the post-prefill fork always has
+  somewhere to land.
 * **Chunked prefill** — prompts stream into the pool ``chunk`` tokens
   per tick, interleaved with decode ticks of the already-running slots,
   through one fixed-shape jitted chunk step (the last chunk is padded;
@@ -16,43 +19,68 @@ Replaces the dense slot loop of ``serve.batching.ContinuousBatcher``:
   (capped at (n-1)//BS blocks so the block holding the last prompt
   token — whose logits seed decode — is always privately recomputed and
   shared blocks are never written).
+* **Copy-on-write beam forking (§12)** — an ``n_best > 1`` request
+  forks its block table after prefill (``KVBlockPool.fork``: refcount
+  bumps, zero KV copied); fork rank r greedily continues the r-th best
+  first token. The forks share every prompt block until a fork's first
+  decode write touches the shared partial tail block, which
+  copy-on-writes THAT block only (``_ensure_capacity``), so n-best KV
+  grows by the generated tail per fork, not a full prefix per fork.
+  ``done[rid]`` is the rank-ordered list of outputs; each fork
+  bit-matches an independently-prefilled greedy run seeded with its
+  first token.
+* **Speculative decoding (§12)** — with ``spec=SpecConfig(draft, k)``
+  the decode tick becomes a draft+verify pass: the draft provider
+  proposes k tokens per live slot and the target scores all k+1
+  positions ([pending token, drafts]) in ONE ``api.verify_step``
+  dispatch — structurally a chunked-prefill step, so attention runs
+  through the same offset-causal ``ops.paged_flash_prefill`` kernel and
+  the weight stream is paid once per pass instead of once per token.
+  Greedy acceptance keeps the longest draft prefix matching the
+  target's own argmax chain plus the target's bonus token; rollback is
+  a block-table truncation (``_truncate``) — rejected positions hold
+  stale K/V that the next pass overwrites before any read, so no KV is
+  rewritten. Any draft yields token-identical greedy output; the draft
+  only moves the acceptance rate (``spec_report``).
 * **Preemption by eviction** — when the pool runs dry mid-decode the
   youngest running request is evicted (blocks released, request
   re-queued at the front); greedy decoding makes the later re-run
   token-identical, so preemption trades recompute for memory, never
-  correctness.
+  correctness. A beam group is evicted as a unit and replayed from
+  scratch (deterministic forking makes the replay identical).
 
 Exactness: every tick runs the same model step functions as the dense
 engine over the same masked shapes (virtual length NBMAX·BS == the
 dense engine's max_len), so greedy outputs are token-identical to
 ``Engine.generate`` — asserted across dense/MoE/VLM in
-tests/test_paged.py. Caveat: on the Pallas kernel path (TPU /
-force_pallas) with ``use_lut_softmax=True`` the paged kernel caps the
-softmax group at the block size while the dense kernel uses
-``cfg.softmax_group``; LUT grouping is numerics-visible, so kernel-path
-LUT serving agrees with the dense engine only to LUT tolerance, not
-token-identically (exact-exp mode and the off-TPU ref path are
-unaffected — DESIGN.md §10).
+tests/test_paged.py and tests/test_spec_decode.py. Caveat: on the
+Pallas kernel path (TPU / force_pallas) with ``use_lut_softmax=True``
+the paged kernel caps the softmax group at the block size while the
+dense kernel uses ``cfg.softmax_group``; LUT grouping is
+numerics-visible, so kernel-path LUT serving agrees with the dense
+engine only to LUT tolerance, not token-identically (exact-exp mode and
+the off-TPU ref path are unaffected — DESIGN.md §10). MoE verify
+chunks group k+1 tokens per slot, so the §10 capacity caveat applies to
+speculative decode the same way it applies to chunked prefill.
 
 The per-tick decode-active counts feed the WS-OCS weight-stream
 amortization model (``sim.perf_model.scheduler_amortization_report``):
 the RCW-bound weight stream is paid once per tick and divided by the
 number of active decode slots — the denominator this subsystem exists
-to keep high. Per-tick prefill chunk-launch counts (``tick_prefill``)
-ride along in the same report so prefill batching is measured the same
-way.
+to keep high. Speculation multiplies the numerator instead: one stream
+pass emits ``accepted + 1`` tokens per slot (``tick_emitted``,
+modeled by ``sim.perf_model.speculative_decode_latency``).
 
 Since PR 6 the chunk step's attention consumes the block table
 *directly*: ``models.layers`` routes it to ``ops.paged_flash_prefill``,
 whose Pallas kernel gathers K/V pool blocks through a scalar-prefetched
-table (DESIGN.md §11) — the scheduler no longer triggers any dense
-``gather_paged_kv`` copy of the prefix on the chunk path, so
-prefix-cache hits are never re-densified.
+table (DESIGN.md §11) — and since PR 7 the speculative verify step
+rides the same kernel path with S = k+1.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -64,6 +92,7 @@ from repro.configs.base import ModelConfig
 from repro.models import api
 from repro.serve.batching import Request
 from repro.serve.paged.block_pool import KVBlockPool, prefix_hashes
+from repro.serve.spec_decode import SpecConfig, accept_length
 
 
 @dataclasses.dataclass
@@ -86,6 +115,7 @@ class _Seq:
     pos: int                          # next cache write position
     phase: str                        # "prefill" | "decode"
     ticket: int                       # admission order (preemption prio)
+    rank: int = 0                     # beam fork rank (0 = prefill root)
     out: List[int] = dataclasses.field(default_factory=list)
 
     @property
@@ -97,15 +127,25 @@ class _Seq:
         return len(self.entry.pre_out) + len(self.out)
 
 
+@dataclasses.dataclass
+class _Hold:
+    """Slot reserved for a beam fork while its root is still
+    prefilling; filled by ``_prefill_tick`` at prompt completion."""
+    rid: int
+
+
 class Scheduler:
     """Drives dense/MoE/VLM decode over a paged KV pool. ``num_blocks``
     includes the reserved null block; it must be at least
-    max_len//block_size + 2 so a lone request can always run."""
+    max_len//block_size + 2 so a lone request can always run. Pass
+    ``spec=SpecConfig(draft, k)`` to replace the one-token decode tick
+    with a k-draft speculative verify pass (DESIGN.md §12)."""
 
     def __init__(self, cfg: ModelConfig, params, slots: int = 4,
                  max_len: int = 512, block_size: int = 16,
                  num_blocks: Optional[int] = None, chunk: int = 32,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True,
+                 spec: Optional[SpecConfig] = None):
         assert cfg.family in ("dense", "moe", "vlm"), cfg.family
         assert max_len % block_size == 0, (max_len, block_size)
         self.cfg, self.params = cfg, params
@@ -118,6 +158,7 @@ class Scheduler:
             f"pool too small: {num_blocks} < {self.nbmax + 2}"
         self.pool = KVBlockPool(num_blocks, block_size)
         self.prefix_cache = prefix_cache
+        self.spec = spec
 
         cache = api.init_cache(cfg, slots, max_len, num_blocks=num_blocks,
                                block_size=block_size)
@@ -125,36 +166,56 @@ class Scheduler:
         self.num_layers = cache["k"].shape[0]
 
         self.queue: Deque[_Entry] = deque()
-        self.slots: List[Optional[_Seq]] = [None] * slots
-        self.done: Dict[int, List[int]] = {}
+        self.slots: List[Union[_Seq, _Hold, None]] = [None] * slots
+        self.done: Dict[int, List] = {}
+        self._group_out: Dict[int, List[Optional[List[int]]]] = {}
         self.tokens = np.zeros((slots, 1), np.int32)
         self._ticket = 0
         self.tick_active: List[int] = []         # decode slots per tick
         self.tick_prefill: List[int] = []        # prefill chunk launches/tick
+        self.tick_emitted: List[int] = []        # tokens emitted per tick
+        self.spec_passes = 0                     # per-slot verify passes
+        self.spec_drafted = 0
+        self.spec_accepted = 0
 
         self._decode = jax.jit(
             lambda p, t, c, i: api.serve_step(p, cfg, t, c, i))
         self._chunk = jax.jit(
             lambda p, t, c, s: api.prefill_chunk_step(
                 p, cfg, {"tokens": t}, c, s))
+        if spec is not None:
+            assert spec.k >= 1, spec.k
+            self._verify = jax.jit(
+                lambda p, t, c, s: api.verify_step(p, cfg, t, c, s))
+        # COW device copy: one pool row dst ← src across the layer axis
+        # (donated so the pool is updated in place, not duplicated)
+        self._blk_copy = jax.jit(
+            lambda pool, dst, src: pool.at[:, dst].set(pool[:, src]),
+            donate_argnums=0)
 
     # -- public API ------------------------------------------------------
     def submit(self, req: Request) -> None:
         n = len(req.prompt)
         assert n >= 1 and n + req.max_new - 1 <= self.max_len, \
             (n, req.max_new, self.max_len)
+        assert 1 <= req.n_best <= self.n_slots, (req.n_best, self.n_slots)
         self.queue.append(_Entry(req))
 
-    def run(self, max_ticks: int = 100_000) -> Dict[int, List[int]]:
-        """Drive until queue and slots drain; returns rid → generated."""
+    def run(self, max_ticks: int = 100_000) -> Dict[int, List]:
+        """Drive until queue and slots drain; returns rid → generated
+        (a flat token list, or a rank-ordered list of lists for
+        ``n_best > 1`` requests)."""
         for _ in range(max_ticks):
-            active = any(s is not None for s in self.slots)
+            active = any(isinstance(s, _Seq) for s in self.slots)
             if not active and not self.queue:
                 break
             self._admit()
             self._prefill_tick()
-            self._grow_or_preempt()
-            self._decode_tick()
+            if self.spec is not None:
+                self._spec_tick()
+            else:
+                self._grow_or_preempt()
+                self._decode_tick()
         return self.done
 
     # -- memory accounting ----------------------------------------------
@@ -176,14 +237,30 @@ class Scheduler:
         return scheduler_amortization_report(self.tick_active,
                                              prefill_counts=self.tick_prefill)
 
+    def spec_report(self) -> Dict[str, float]:
+        """Realized speculation stats: per-pass acceptance and the
+        tokens-per-weight-stream-pass multiplier the verify path buys
+        (1.0 when speculation is off — every pass emits one token)."""
+        passes = self.spec_passes
+        return {
+            "passes": passes,
+            "drafted": self.spec_drafted,
+            "accepted": self.spec_accepted,
+            "accept_rate": (self.spec_accepted / self.spec_drafted)
+            if self.spec_drafted else 0.0,
+            "tokens_per_pass": ((self.spec_accepted + passes) / passes)
+            if passes else 1.0,
+            "cow_copies": self.pool.cow_copies,
+        }
+
     # -- admission -------------------------------------------------------
     def _admit(self) -> None:
-        for si in range(self.n_slots):
-            if not self.queue:
-                return
-            if self.slots[si] is not None:
-                continue
+        while self.queue:
             entry = self.queue[0]
+            nb = entry.req.n_best
+            free = [si for si, s in enumerate(self.slots) if s is None]
+            if len(free) < nb:
+                return                            # FIFO: no queue skip
             toks = entry.tokens
             n = len(toks)
             shared = self.pool.match_prefix(toks) if self.prefix_cache \
@@ -193,26 +270,36 @@ class Scheduler:
             shared = shared[:(n - 1) // self.block_size]
             need = -(-n // self.block_size) - len(shared)
             # shared blocks sitting in the prefix cache count in num_free
-            # (evictable) but retaining them consumes that allocatability
+            # (evictable) but retaining them consumes that allocatability;
+            # decode headroom is one block per eventual fork
             cached_shared = sum(self.pool.is_cached(b) for b in shared)
-            if self.pool.num_free - cached_shared < need + 1:  # +1 decode
+            if self.pool.num_free - cached_shared < need + nb:
                 return                            # FIFO: no queue skip
             self.queue.popleft()
             for bid in shared:
                 self.pool.retain(bid)
             table = list(shared)
+            ok = True
             for _ in range(need):
                 bid = self.pool.alloc()
                 if bid is None:                   # accounting drift guard
-                    for b in table:
-                        self.pool.release(b)
-                    self.queue.appendleft(entry)
-                    return
+                    ok = False
+                    break
                 table.append(bid)
+            if not ok:
+                for b in table:
+                    self.pool.release(b)
+                self.queue.appendleft(entry)
+                return
+            si = free[0]
             self.slots[si] = _Seq(entry=entry, table=table,
                                   n_shared=len(shared),
                                   pos=len(shared) * self.block_size,
                                   phase="prefill", ticket=self._ticket)
+            for hsi in free[1:nb]:
+                self.slots[hsi] = _Hold(entry.req.rid)
+            if nb > 1:
+                self._group_out[entry.req.rid] = [None] * nb
             self._ticket += 1
 
     # -- chunked prefill -------------------------------------------------
@@ -231,7 +318,7 @@ class Scheduler:
     def _prefill_tick(self) -> None:
         launches = 0
         for si, seq in enumerate(self.slots):
-            if seq is None or seq.phase != "prefill":
+            if not isinstance(seq, _Seq) or seq.phase != "prefill":
                 continue
             launches += 1
             toks = seq.entry.tokens
@@ -256,54 +343,132 @@ class Scheduler:
                     self.pool.register_prefix(seq.table[i], hashes[i])
             seq.phase = "decode"
             seq.pos = n
-            first = int(jnp.argmax(logits[0, take - 1]))
-            self._emit(si, first)
+            nb = seq.entry.req.n_best
+            if nb == 1:
+                self._emit(si, int(jnp.argmax(logits[0, take - 1])))
+                continue
+            # beam fork (§12): rank r continues the r-th best first
+            # token; tables are forked by refcount — the first decode
+            # write into the shared partial tail block copy-on-writes it
+            firsts = np.asarray(api.topn_tokens(logits[0, take - 1], nb))
+            holds = [hi for hi, s in enumerate(self.slots)
+                     if isinstance(s, _Hold) and s.rid == seq.rid]
+            assert len(holds) == nb - 1, (seq.rid, holds)
+            for r, hsi in enumerate(holds, start=1):
+                self.slots[hsi] = _Seq(
+                    entry=seq.entry, table=self.pool.fork(seq.table),
+                    n_shared=seq.n_shared, pos=n, phase="decode",
+                    ticket=seq.ticket, rank=r)
+                self._emit(hsi, int(firsts[r]))
+            self._emit(si, int(firsts[0]))
         if launches:
             self.tick_prefill.append(launches)
 
-    # -- decode growth / preemption --------------------------------------
+    # -- decode growth / COW / preemption --------------------------------
     def _release_seq(self, seq: _Seq) -> None:
         for bid in seq.table:
             self.pool.release(bid)
 
-    def _preempt_youngest(self) -> bool:
-        """Evict the latest-admitted active request; False if there is
-        no other request to evict (pool genuinely exhausted)."""
-        cands = [(s.ticket, si) for si, s in enumerate(self.slots)
-                 if s is not None]
-        if len(cands) <= 1:
-            return False
-        _, si = max(cands)
-        seq = self.slots[si]
-        self._release_seq(seq)
-        self.queue.appendleft(
-            _Entry(seq.entry.req, seq.entry.pre_out + seq.out))
+    def _release_slot(self, si: int) -> None:
+        s = self.slots[si]
+        if isinstance(s, _Seq):
+            self._release_seq(s)
+            if self.spec is not None:
+                self.spec.draft.release((s.rid, s.rank))
         self.slots[si] = None
         self.tokens[si, 0] = 0
+
+    def _preempt_youngest(self) -> bool:
+        """Evict the latest-admitted active request (a beam group as a
+        unit); False if there is nothing else to evict (pool genuinely
+        exhausted)."""
+        cands = [(s.ticket, si) for si, s in enumerate(self.slots)
+                 if isinstance(s, _Seq)]
+        if not cands:
+            return False
+        _, vsi = max(cands)
+        victim = self.slots[vsi]
+        rid = victim.rid
+        group = [si for si, s in enumerate(self.slots)
+                 if isinstance(s, (_Seq, _Hold)) and s.rid == rid]
+        if all(si in group for _, si in cands):
+            return False                   # the victim is all that runs
+        nb = victim.entry.req.n_best
+        for si in group:
+            self._release_slot(si)
+        if nb > 1:
+            # forks diverge per rank — replay the whole group from
+            # scratch (deterministic top-n fork → identical re-run)
+            self._group_out[rid] = [None] * nb
+            self.queue.appendleft(_Entry(victim.entry.req))
+        else:
+            self.queue.appendleft(
+                _Entry(victim.entry.req,
+                       victim.entry.pre_out + victim.out))
         return True
 
-    def _grow_or_preempt(self) -> None:
-        for si in range(self.n_slots):
+    def _copy_block(self, dst: int, src: int) -> None:
+        """Device-side COW copy of one pool block (all layers, K and V)."""
+        d = jnp.asarray(dst, jnp.int32)
+        s = jnp.asarray(src, jnp.int32)
+        self.kv = {"k": self._blk_copy(self.kv["k"], d, s),
+                   "v": self._blk_copy(self.kv["v"], d, s)}
+
+    def _ensure_capacity(self, si: int, last_pos: int) -> bool:
+        """Make slot ``si`` writable through position ``last_pos``: grow
+        the table with fresh blocks and copy-on-write any shared block
+        in the write range [seq.pos, last_pos] (beam forks share the
+        prompt tail until their first write). Preempts on a dry pool;
+        returns False if the slot itself was preempted away. Positions
+        past max_len (a speculative chunk's overhang near the end) need
+        no blocks — ``write_kv_cache_paged`` routes them to the null
+        block."""
+        last_blk = min(last_pos // self.block_size, self.nbmax - 1)
+        while True:
             seq = self.slots[si]
-            if seq is None or seq.phase != "decode":
-                continue
-            while seq.pos // self.block_size >= len(seq.table):
+            if not isinstance(seq, _Seq) or seq.phase != "decode":
+                return False
+            todo = None
+            if len(seq.table) <= last_blk:
+                todo = ("grow", None)
+            else:
+                for i in range(seq.pos // self.block_size, last_blk + 1):
+                    if not self.pool.writable(seq.table[i]):
+                        todo = ("cow", i)
+                        break
+            if todo is None:
+                return True
+            kind, i = todo
+            if kind == "grow":
                 bid = self.pool.alloc()
                 if bid is not None:
                     seq.table.append(bid)
                     continue
-                if not self._preempt_youngest():
-                    raise RuntimeError(
-                        "KV pool exhausted with a single active request; "
-                        f"need num_blocks >= {self.nbmax + 2}")
-                seq = self.slots[si]      # the victim may be this slot
-                if seq is None or seq.phase != "decode":
-                    break
+            else:
+                old = seq.table[i]
+                new = self.pool.cow(old)
+                if new is not None:
+                    # the old block's contents are intact (live holders,
+                    # or parked in the prefix cache) — copy then swap
+                    self._copy_block(new, old)
+                    seq.table[i] = new
+                    continue
+            if not self._preempt_youngest():
+                raise RuntimeError(
+                    "KV pool exhausted with a single active "
+                    "request/group; need num_blocks >= "
+                    f"{self.nbmax + 2}")
+
+    def _grow_or_preempt(self) -> None:
+        for si in range(self.n_slots):
+            seq = self.slots[si]
+            if isinstance(seq, _Seq) and seq.phase == "decode":
+                self._ensure_capacity(si, seq.pos)
 
     # -- decode ----------------------------------------------------------
     def _decode_tick(self) -> None:
         live = [si for si, s in enumerate(self.slots)
-                if s is not None and s.phase == "decode"]
+                if isinstance(s, _Seq) and s.phase == "decode"]
         if not live:
             return
         self.tick_active.append(len(live))
@@ -319,9 +484,79 @@ class Scheduler:
             jnp.asarray(pos, jnp.int32))
         self.kv = {"k": cache["k"], "v": cache["v"]}
         nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+        self.tick_emitted.append(len(live))
         for si in live:
             self.slots[si].pos += 1
             self._emit(si, int(nxt[si]))
+
+    # -- speculative decode (§12) ----------------------------------------
+    def _spec_tick(self) -> None:
+        """Draft k, verify k+1 in one paged chunk dispatch, accept the
+        longest matching draft prefix + the target's bonus token, roll
+        back by table truncation."""
+        K = self.spec.k
+        for si in range(self.n_slots):
+            s = self.slots[si]
+            if isinstance(s, _Seq) and s.phase == "decode":
+                # the pass writes K/V at pos..pos+K — grow/COW up front
+                self._ensure_capacity(si, s.pos + K)
+        live = [si for si, s in enumerate(self.slots)
+                if isinstance(s, _Seq) and s.phase == "decode"]
+        if not live:
+            return
+        self.tick_active.append(len(live))
+        drafts: Dict[int, List[int]] = {}
+        for si in live:
+            seq = self.slots[si]
+            # the draft sees everything emitted so far: prompt, replayed
+            # pre_out, and out (whose last element is the pending token)
+            drafts[si] = list(self.spec.draft.draft(
+                (seq.rid, seq.rank), seq.entry.tokens + seq.out, K))
+            assert len(drafts[si]) == K, (si, drafts[si])
+        buf = np.zeros((self.n_slots, K + 1), np.int32)
+        bt = np.zeros((self.n_slots, self.nbmax), np.int32)
+        pos = np.zeros(self.n_slots, np.int32)
+        for si in live:
+            seq = self.slots[si]
+            buf[si, 0] = self.tokens[si, 0]      # pending token
+            buf[si, 1:] = drafts[si]
+            bt[si] = self._bt_row(seq)
+            pos[si] = seq.pos
+        cache = {"k": self.kv["k"], "v": self.kv["v"],
+                 "bt": self._layered_bt(bt)}
+        logits, cache = self._verify(
+            self.params, jnp.asarray(buf), cache,
+            jnp.asarray(pos, jnp.int32))
+        self.kv = {"k": cache["k"], "v": cache["v"]}
+        tgt = np.asarray(jnp.argmax(logits, -1), np.int32)   # (B, K+1)
+        emitted = 0
+        for si in live:
+            seq = self.slots[si]
+            a = accept_length(drafts[si], tgt[si])
+            self.spec_passes += 1
+            self.spec_drafted += K
+            self.spec_accepted += a
+            # positions pos..pos+a now hold correct K/V ([pending,
+            # accepted drafts]); the bonus token is emitted un-cached —
+            # it is the next pass's pending token
+            seq.pos += a + 1
+            for tok in drafts[si][:a] + [int(tgt[si, a])]:
+                emitted += 1
+                self._emit(si, int(tok))
+                if self.slots[si] is not seq:    # eos / max_new mid-pass
+                    break
+            if self.slots[si] is seq:
+                self._truncate(seq)
+        self.tick_emitted.append(emitted)
+
+    def _truncate(self, seq: _Seq) -> None:
+        """Speculative rollback: drop table blocks wholly past the
+        accepted prefix. No KV rewrite — stale slots inside the kept
+        tail block sit at kpos > qpos until the next pass's chunk write
+        overwrites them (the §11 validity invariant)."""
+        keep = max(-(-seq.pos // self.block_size), 1)
+        while len(seq.table) > keep:
+            self.pool.release(seq.table.pop())
 
     def _emit(self, si: int, tok: int) -> None:
         seq = self.slots[si]
@@ -329,9 +564,15 @@ class Scheduler:
         req = seq.entry.req
         if seq.emitted >= req.max_new or \
                 (req.eos is not None and tok == req.eos):
-            self.done[req.rid] = seq.entry.pre_out + seq.out
-            self._release_seq(seq)
-            self.slots[si] = None
-            self.tokens[si, 0] = 0
+            out = seq.entry.pre_out + seq.out
+            if req.n_best > 1:
+                grp = self._group_out[req.rid]
+                grp[seq.rank] = out
+                if all(o is not None for o in grp):
+                    self.done[req.rid] = list(grp)
+                    del self._group_out[req.rid]
+            else:
+                self.done[req.rid] = out
+            self._release_slot(si)
         else:
             self.tokens[si, 0] = tok

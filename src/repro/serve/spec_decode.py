@@ -1,0 +1,205 @@
+"""Draft providers for speculative decoding (DESIGN.md §12).
+
+The paged scheduler's speculative tick multiplies tokens per
+weight-stream pass: a cheap *draft* proposes K tokens per sequence, the
+target model scores all K+1 positions (the pending token plus the K
+drafts) in ONE paged chunk dispatch — ``api.verify_step``, which routes
+through the same offset-causal ``ops.paged_flash_prefill`` path as
+chunked prefill — and greedy acceptance keeps the longest draft prefix
+that matches the target's own argmax chain, plus the target's bonus
+token. Rejection is a block-table truncation: rejected positions hold
+stale K/V that the next verify chunk overwrites before any read, so no
+KV is ever rewritten on rollback.
+
+Exactness does NOT depend on the draft: every emitted token is either a
+draft the target itself would have produced greedily or the target's
+own argmax, so ANY ``DraftProvider`` yields token-identical greedy
+output versus the non-speculative engine — the draft only moves the
+acceptance rate (and therefore the speedup). Two providers:
+
+* ``ModelDraft`` — a real draft model (typically a smaller config)
+  decoding greedily against its own dense KV cache, resynced to the
+  accepted sequence each pass. ``draft_cfg == target_cfg`` gives
+  acceptance 1.0 and is the token-identity anchor in tests.
+* ``OracleDraft`` — a measurement device for benchmarks: drafts the
+  known greedy continuation, deterministically corrupted per position
+  so acceptance averages a chosen rate. Zero draft cost, so BENCH_pr7's
+  tok/s-vs-acceptance sweep isolates the verify-path economics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Hashable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+
+
+@dataclasses.dataclass
+class SpecConfig:
+    """Scheduler speculation knobs: ``draft`` is any DraftProvider,
+    ``k`` the number of drafted tokens verified per pass (the verify
+    chunk is k+1 wide)."""
+    draft: "DraftProvider"
+    k: int = 4
+
+
+class DraftProvider:
+    """Interface: ``draft(key, tokens, k)`` returns k proposed
+    continuation tokens for the sequence ``tokens`` (prompt + all
+    accepted/emitted tokens so far); ``key`` identifies the sequence
+    (stable across passes, unique per beam fork). ``release(key)``
+    drops any per-sequence state when the sequence finishes or is
+    preempted."""
+
+    def draft(self, key: Hashable, tokens: Sequence[int],
+              k: int) -> List[int]:
+        raise NotImplementedError
+
+    def release(self, key: Hashable) -> None:      # pragma: no cover
+        pass
+
+
+def accept_length(drafts: Sequence[int], target: Sequence[int]) -> int:
+    """Greedy acceptance: the longest prefix of ``drafts`` matching the
+    target's argmax chain ``target`` (target[i] is the target's next
+    token after drafts[:i])."""
+    a = 0
+    for d, t in zip(drafts, target):
+        if d != t:
+            break
+        a += 1
+    return a
+
+
+def _bucket(n: int) -> int:
+    b = 8
+    while b < n:
+        b *= 2
+    return b
+
+
+class ModelDraft(DraftProvider):
+    """Greedy draft model over a private dense KV cache per sequence.
+
+    Each pass feeds the tokens the sequence gained since the last sync
+    (accepted drafts + the target's bonus token) through single-token
+    decode steps, then drafts ``k`` tokens greedily. Drafted tokens are
+    fed back (their K/V lands at positions past the synced length), but
+    the synced length only advances over *accepted* tokens — the next
+    pass rewrites the speculative positions before anything reads them,
+    the same overwrite-before-read invariant the target's paged verify
+    relies on.
+
+    The first call for a key prefills the whole sequence, padded to a
+    power-of-two bucket (one jit per bucket, the ContinuousBatcher
+    idiom); the bucket-padded last-row logits are inexact, so the last
+    real token is re-decoded at its true position — identical K/V,
+    exact logits."""
+
+    def __init__(self, cfg: ModelConfig, params, max_len: int = 512):
+        self.cfg, self.params, self.max_len = cfg, params, max_len
+        self._state: Dict[Hashable, Tuple[object, int, jax.Array]] = {}
+        self._decode = jax.jit(
+            lambda p, t, c, i: api.serve_step(p, cfg, t, c, i))
+        self._prefills: Dict[int, object] = {}
+
+    def _prefill_fn(self, bucket: int):
+        if bucket not in self._prefills:
+            cfg = self.cfg
+            self._prefills[bucket] = jax.jit(
+                lambda p, t, c: api.prefill_step(p, cfg, {"tokens": t}, c))
+        return self._prefills[bucket]
+
+    def _sync(self, key: Hashable, tokens: Sequence[int]):
+        """Bring the key's cache up to ``tokens``; returns (cache, m,
+        logits) with logits predicting token m (m == len(tokens))."""
+        state = self._state.get(key)
+        if state is None:
+            n = len(tokens)
+            bucket = _bucket(n)
+            buf = np.zeros((1, bucket), np.int32)
+            buf[0, :n] = tokens
+            cache = api.init_cache(self.cfg, 1, self.max_len)
+            _, cache = self._prefill_fn(bucket)(
+                self.params, jnp.asarray(buf), cache)
+            # bucket padding poisons the last-row logits and the K/V
+            # past n; re-decode the last real token at n-1 for both
+            logits, cache = self._decode(
+                self.params, jnp.asarray([[tokens[-1]]], jnp.int32),
+                cache, jnp.asarray(n - 1, jnp.int32))
+            return cache, n, logits
+        cache, m, logits = state
+        for p in range(m, len(tokens)):
+            logits, cache = self._decode(
+                self.params, jnp.asarray([[tokens[p]]], jnp.int32),
+                cache, jnp.asarray(p, jnp.int32))
+        return cache, len(tokens), logits
+
+    def draft(self, key: Hashable, tokens: Sequence[int],
+              k: int) -> List[int]:
+        cache, m, logits = self._sync(key, tokens)
+        out: List[int] = []
+        for j in range(k):
+            tok = int(jnp.argmax(logits[0]))
+            out.append(tok)
+            if j < k - 1:                       # last draft's K/V unused
+                logits, cache = self._decode(
+                    self.params, jnp.asarray([[tok]], jnp.int32),
+                    cache, jnp.asarray(m + j, jnp.int32))
+        # speculative K/V past m is rewritten on the next sync
+        self._state[key] = (cache, m, logits)
+        return out
+
+    def release(self, key: Hashable) -> None:
+        self._state.pop(key, None)
+
+
+class OracleDraft(DraftProvider):
+    """Scripted drafts with a dialable acceptance rate (bench/test
+    device — no model runs, so draft cost is ~zero).
+
+    ``sequences`` maps each key to the full greedy reference sequence
+    (prompt + reference continuation). Each drafted position is the
+    reference token, corrupted to a guaranteed-wrong token with
+    probability ``1 - accept_rate`` — decided by a counter-based RNG on
+    (seed, key, position), so the acceptance pattern is a deterministic
+    property of the position, independent of how passes land on it.
+    Positions past the reference draft a wrong-by-construction token
+    (the sequence is about to finish anyway)."""
+
+    def __init__(self, sequences: Dict[Hashable, Sequence[int]],
+                 accept_rate: float = 1.0, seed: int = 0,
+                 vocab_size: int = 1 << 30):
+        self.sequences = {k: list(v) for k, v in sequences.items()}
+        self.accept_rate = float(accept_rate)
+        self.seed = seed
+        self.vocab_size = vocab_size
+
+    def _corrupt(self, tok: int, key: Hashable, pos: int) -> int:
+        # seed from raw ints where possible: Python's hash() is
+        # per-process randomized, which would unseat bench reproducibility
+        parts = key if isinstance(key, tuple) else (key,)
+        ints = [p for p in parts if isinstance(p, int)] or [abs(hash(key))]
+        rng = np.random.default_rng([self.seed, pos] + ints)
+        if rng.random() < self.accept_rate:
+            return tok
+        return int((tok + 1 + rng.integers(self.vocab_size - 1))
+                   % self.vocab_size)
+
+    def draft(self, key: Hashable, tokens: Sequence[int],
+              k: int) -> List[int]:
+        full = self.sequences[key]
+        pos = len(tokens)
+        out = []
+        for j in range(k):
+            p = pos + j
+            ref = full[p] if p < len(full) else 0
+            tok = self._corrupt(ref, key, p) if p < len(full) \
+                else (ref + 1) % self.vocab_size
+            out.append(tok)
+        return out

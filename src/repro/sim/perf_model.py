@@ -137,6 +137,47 @@ def amortized_decode_latency(n_active: int, rcw: bool = True,
         + t_nl_per_token(fusion, ctx, chip)
 
 
+def expected_tokens_per_pass(k: int, accept_rate: float) -> float:
+    """E[tokens emitted per verify pass] under greedy acceptance with k
+    drafts and per-position draft-match probability ``accept_rate``:
+    the accepted prefix length a is geometric-truncated, P(a) =
+    α^a(1-α) for a<k and α^k at a=k, and every pass emits a+1 tokens
+    (accepted drafts + the target's bonus token), giving the closed
+    form (1-α^{k+1})/(1-α)."""
+    assert k >= 1, k
+    a = float(accept_rate)
+    assert 0.0 <= a <= 1.0, a
+    if a == 1.0:
+        return float(k + 1)
+    return (1.0 - a ** (k + 1)) / (1.0 - a)
+
+
+def speculative_decode_latency(n_active: int, k: int, accept_rate: float,
+                               rcw: bool = True, fusion: bool = True,
+                               ctx: int = 1024, chip: RCWCIMChip = RCWCIM,
+                               write_bw: float = None) -> float:
+    """Per-EMITTED-token decode latency with k-draft speculation on top
+    of continuous batching (DESIGN.md §12). One verify pass still pays
+    the RCW-bound weight stream once (divided across ``n_active`` slots,
+    exactly as in ``amortized_decode_latency``) but emits
+    ``expected_tokens_per_pass(k, accept_rate)`` tokens per slot —
+    speculation multiplies the stream amortization's numerator where
+    batching grows its denominator. The price: MAC and nonlinear work
+    run for all k+1 verified positions regardless of how many are
+    accepted, so those terms inflate by (k+1)/E — at low acceptance the
+    wasted lanes overtake the stream saving, which is the crossover the
+    BENCH_pr7 acceptance sweep locates empirically. Draft cost is not
+    modeled (the oracle-draft benchmark measures exactly this bound)."""
+    assert n_active >= 1, n_active
+    e = expected_tokens_per_pass(k, accept_rate)
+    t_dram = t_dram_weights(chip)
+    t_upd = GEOM.weight_bytes() / (write_bw or CIM_WRITE_BW)
+    stream = max(t_dram, t_upd) if rcw else t_dram + t_upd
+    per_pass = stream / n_active + (k + 1) * (
+        t_mac_per_token(chip) + t_nl_per_token(fusion, ctx, chip))
+    return per_pass / e
+
+
 def scheduler_amortization_report(active_counts, rcw: bool = True,
                                   fusion: bool = True,
                                   ctx: int = 1024,

@@ -64,6 +64,76 @@ def test_pool_prefix_cache_reuse_and_eviction():
     assert pool.lookup_prefix(h[0]) == a
 
 
+def test_pool_lru_eviction_ordering():
+    """Cached (refcount-0, hashed) blocks must be reclaimed in
+    least-recently-released order, and reviving a block (retain) must
+    pull it out of the eviction queue entirely."""
+    pool = KVBlockPool(num_blocks=5, block_size=2)
+    a, b, c, d = (pool.alloc() for _ in range(4))
+    for bid, h in ((a, 101), (b, 102), (c, 103), (d, 104)):
+        pool.register_prefix(bid, h)
+    # release in a scrambled order: c first, then a, then d, then b
+    for bid in (c, a, d, b):
+        pool.release(bid)
+    pool.retain(d)                       # revive d — no longer evictable
+    got = [pool.alloc() for _ in range(3)]
+    assert got == [c, a, b]              # LRU order, d skipped
+    assert pool.evictions == 3
+    assert pool.alloc() is None          # d still live, pool dry
+    # evicted blocks lost their hashes; d kept its mapping
+    assert pool.lookup_prefix(103) is None
+    assert pool.lookup_prefix(104) == d
+
+
+def test_pool_prefix_stats_counters():
+    pool = KVBlockPool(num_blocks=6, block_size=2)
+    toks = [5, 6, 7, 8, 9, 10]
+    h = prefix_hashes(toks, 2)
+    a, b = pool.alloc(), pool.alloc()
+    pool.register_prefix(a, h[0])
+    pool.register_prefix(b, h[1])
+    assert pool.match_prefix(toks) == [a, b]
+    # 2 hits + 1 miss (the probe for the unregistered third block)
+    assert (pool.prefix_hits, pool.prefix_misses) == (2, 1)
+    assert pool.match_prefix([5, 6, 0, 0]) == [a]
+    assert (pool.prefix_hits, pool.prefix_misses) == (3, 2)
+    assert pool.match_prefix([0, 0]) == []
+    assert (pool.prefix_hits, pool.prefix_misses) == (3, 3)
+    # a full-block-aligned prompt that fully matches ends on a hit with
+    # no trailing miss (there is no probe past its last block)
+    assert pool.match_prefix(toks[:4]) == [a, b]
+    assert (pool.prefix_hits, pool.prefix_misses) == (5, 3)
+    assert pool.stats == {"prefix_hits": 5, "prefix_misses": 3,
+                          "evictions": 0, "cow_copies": 0}
+
+
+def test_pool_cow_fork_primitives():
+    """fork bumps refcounts without moving KV; writable demands sole
+    ownership AND no published hash; cow trades a reference for a fresh
+    block (or None on a dry pool, leaving the reference intact)."""
+    pool = KVBlockPool(num_blocks=5, block_size=4)
+    a, b = pool.alloc(), pool.alloc()
+    pool.register_prefix(a, 201)
+    table = pool.fork([a, b])
+    assert table == [a, b]
+    assert pool.refcount(a) == 2 and pool.refcount(b) == 2
+    assert not pool.writable(a) and not pool.writable(b)
+    new = pool.cow(b)                    # shared, unhashed → COW
+    assert new is not None and new not in (a, b)
+    assert pool.refcount(b) == 1 and pool.refcount(new) == 1
+    assert pool.writable(b) and pool.writable(new)
+    # hashed blocks stay unwritable even at refcount 1 (the hash
+    # describes the current bytes — writing would poison the cache)
+    pool.release(a)
+    assert pool.refcount(a) == 1 and not pool.writable(a)
+    assert pool.cow_copies == 1
+    # dry pool: cow fails cleanly, reference untouched
+    c = pool.alloc()
+    assert c is not None and pool.alloc() is None
+    pool.retain(c)
+    assert pool.cow(c) is None and pool.refcount(c) == 2
+
+
 # ---------------------------------------------------------------------------
 # Paged kernel vs oracle
 # ---------------------------------------------------------------------------
@@ -199,8 +269,10 @@ def test_paged_flash_oracle_is_pr5_chunk_path(rng):
 
 
 def test_untileable_chunk_raises_instead_of_densifying():
-    """Satellite 1: on the kernel path, shapes the grid cannot tile must
-    RAISE, not silently fall back to the dense oracle."""
+    """On the kernel path, shapes the grid cannot tile must RAISE, not
+    silently fall back to the dense oracle — and the message must name
+    the offending shapes and the chosen block sizes, so the fix (pad or
+    re-block) is readable straight off the exception."""
     rng = np.random.default_rng(0)
     B, H, Hkv, D = 1, 2, 2, 32
     q = jnp.asarray(rng.standard_normal((B, H, 24, D)).astype(np.float32))
@@ -209,10 +281,16 @@ def test_untileable_chunk_raises_instead_of_densifying():
     kp, vp, bt = _paged_kv(rng, B, Hkv, D, 8, 16, 4, [48])
     ops.force_pallas(True)
     try:
-        with pytest.raises(ValueError, match="densify"):
+        with pytest.raises(ValueError, match="densify") as ei:
             ops.attention(q, k, k, q_offset=off, block_q=16, block_k=16)
-        with pytest.raises(ValueError, match="densify"):
+        msg = str(ei.value)
+        assert "(1, 2, 24, 32)" in msg and "(1, 2, 48, 32)" in msg
+        assert "block_q=16" in msg and "Sq=24" in msg
+        with pytest.raises(ValueError, match="densify") as ei:
             ops.paged_flash_prefill(q, kp, vp, bt, off, block_q=16)
+        msg = str(ei.value)
+        assert "(1, 2, 24, 32)" in msg and "(8, 16, 2, 32)" in msg
+        assert "block_q=16" in msg and "C=24" in msg
         # dividing block sizes pass through to the kernels
         ops.attention(q, k, k, q_offset=off, block_q=8, block_k=16)
         ops.paged_flash_prefill(q[:, :, :16], kp, vp, bt, off)

@@ -1,0 +1,269 @@
+"""Speculative & parallel decoding on COW block tables (DESIGN.md §12):
+draft-provider acceptance mechanics, token-identity of the speculative
+scheduler against the dense Engine for ANY draft (the §12 exactness
+claim) across dense / MoE / VLM, beam forking that bit-matches
+independently-seeded engine runs at sublinear peak KV, and the
+speculation-adjusted perf-model rows."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import api
+from repro.serve.batching import Request
+from repro.serve.engine import Engine, ServeConfig
+from repro.serve.paged import Scheduler
+from repro.serve.spec_decode import (ModelDraft, OracleDraft, SpecConfig,
+                                     accept_length)
+from repro.sim import perf_model as pm
+
+
+def _engine_refs(cfg, params, prompts, news, max_len):
+    eng = Engine(cfg, params, max_len=max_len)
+    return {i: eng.generate(np.asarray([p], np.int32),
+                            ServeConfig(max_new_tokens=n)
+                            )[0, len(p):].tolist()
+            for i, (p, n) in enumerate(zip(prompts, news))}
+
+
+def _run_spec(cfg, params, prompts, news, spec, **kw):
+    sch = Scheduler(cfg, params, spec=spec, **kw)
+    for i, (p, n) in enumerate(zip(prompts, news)):
+        sch.submit(Request(rid=i, prompt=p, max_new=n))
+    return sch.run(), sch
+
+
+def _dense_cfg():
+    return get_config("llama2-7b", smoke=True).replace(dtype=jnp.float32,
+                                                       num_layers=2)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance mechanics
+# ---------------------------------------------------------------------------
+
+def test_accept_length():
+    assert accept_length([1, 2, 3], [1, 2, 3, 4]) == 3
+    assert accept_length([1, 2, 3], [1, 9, 3, 4]) == 1
+    assert accept_length([5], [4, 4]) == 0
+    assert accept_length([], [7]) == 0
+
+
+def test_expected_tokens_per_pass():
+    assert pm.expected_tokens_per_pass(4, 1.0) == 5.0
+    assert pm.expected_tokens_per_pass(4, 0.0) == 1.0
+    e = pm.expected_tokens_per_pass(4, 0.7)
+    assert abs(e - (1 - 0.7 ** 5) / 0.3) < 1e-12 and 2.7 < e < 2.8
+    # speculation-adjusted latency: beats plain amortization at high
+    # acceptance, loses at low (the wasted-verify-lanes crossover)
+    base = pm.amortized_decode_latency(4)
+    assert pm.speculative_decode_latency(4, 4, 0.95) < base
+    assert pm.speculative_decode_latency(4, 4, 0.05) > base
+
+
+def test_oracle_draft_deterministic_and_dialable():
+    seqs = {("r", 0): list(range(100, 140))}
+    d = OracleDraft(seqs, accept_rate=0.5, seed=3, vocab_size=1000)
+    a = d.draft(("r", 0), seqs[("r", 0)][:10], 6)
+    b = d.draft(("r", 0), seqs[("r", 0)][:10], 6)
+    assert a == b                                 # per-position determinism
+    ref = seqs[("r", 0)][10:16]
+    matches = sum(x == y for x, y in zip(a, ref))
+    assert 0 < matches < 6                        # corrupted but not fully
+    # past-end positions draft wrong-by-construction tokens
+    tail = d.draft(("r", 0), seqs[("r", 0)], 3)
+    assert all(t != 0 or True for t in tail) and len(tail) == 3
+    # rate 1.0 → exact replay
+    exact = OracleDraft(seqs, accept_rate=1.0).draft(
+        ("r", 0), seqs[("r", 0)][:10], 6)
+    assert exact == ref
+
+
+# ---------------------------------------------------------------------------
+# Token-identity: speculative scheduler == dense engine
+# ---------------------------------------------------------------------------
+
+def test_spec_greedy_identity_dense(rng):
+    """draft == target: acceptance 1.0, every pass emits k+1 tokens, and
+    the output is token-identical to the non-speculative engine."""
+    cfg = _dense_cfg()
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    prompts = [rng.integers(1, cfg.vocab_size, size=n).tolist()
+               for n in (7, 13, 21)]
+    news = [6, 9, 5]
+    refs = _engine_refs(cfg, params, prompts, news, max_len=96)
+    spec = SpecConfig(draft=ModelDraft(cfg, params, max_len=96), k=3)
+    done, sch = _run_spec(cfg, params, prompts, news, spec, slots=3,
+                          max_len=96, block_size=8, chunk=16)
+    assert done == refs
+    rep = sch.spec_report()
+    assert rep["accept_rate"] == 1.0
+    assert rep["tokens_per_pass"] == 4.0
+    assert sch.pool.blocks_in_use == 0            # no leaked references
+
+
+def test_spec_identity_independent_of_draft(rng):
+    """The §12 exactness claim: a WRONG draft (different weights) and a
+    half-corrupted oracle both yield the exact same greedy tokens —
+    only the realized acceptance moves."""
+    cfg = _dense_cfg()
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    prompts = [rng.integers(1, cfg.vocab_size, size=n).tolist()
+               for n in (9, 16)]
+    news = [8, 7]
+    refs = _engine_refs(cfg, params, prompts, news, max_len=96)
+
+    other = api.init(jax.random.PRNGKey(99), cfg)   # a real, wrong draft
+    spec = SpecConfig(draft=ModelDraft(cfg, other, max_len=96), k=4)
+    done, sch = _run_spec(cfg, params, prompts, news, spec, slots=2,
+                          max_len=96, block_size=8, chunk=16)
+    assert done == refs
+    assert sch.spec_report()["accept_rate"] < 1.0
+
+    seqs = {(i, 0): prompts[i] + refs[i] for i in range(len(prompts))}
+    spec = SpecConfig(draft=OracleDraft(seqs, accept_rate=0.5,
+                                        vocab_size=cfg.vocab_size), k=4)
+    done, sch = _run_spec(cfg, params, prompts, news, spec, slots=2,
+                          max_len=96, block_size=8, chunk=16)
+    assert done == refs
+    rep = sch.spec_report()
+    assert 0.0 < rep["accept_rate"] < 1.0
+    assert 1.0 < rep["tokens_per_pass"] < 5.0
+
+
+def test_spec_identity_moe(rng):
+    # §10 capacity caveat: capacity must not bind for the k+1-token
+    # verify groups to be token-exact (same as chunked prefill)
+    cfg = get_config("dbrx-132b", smoke=True).replace(
+        dtype=jnp.float32, capacity_factor=8.0)
+    params = api.init(jax.random.PRNGKey(1), cfg)
+    prompts = [rng.integers(1, cfg.vocab_size, size=n).tolist()
+               for n in (6, 13)]
+    news = [5, 6]
+    refs = _engine_refs(cfg, params, prompts, news, max_len=64)
+    spec = SpecConfig(draft=ModelDraft(cfg, params, max_len=64), k=3)
+    done, _ = _run_spec(cfg, params, prompts, news, spec, slots=2,
+                        max_len=64, block_size=8, chunk=8)
+    assert done == refs
+
+
+def test_spec_identity_vlm(rng):
+    cfg = get_config("qwen2-vl-2b", smoke=True).replace(dtype=jnp.float32)
+    params = api.init(jax.random.PRNGKey(2), cfg)
+    prompts = [rng.integers(1, cfg.vocab_size, size=n).tolist()
+               for n in (6, 11)]
+    news = [5, 6]
+    refs = _engine_refs(cfg, params, prompts, news, max_len=64)
+    spec = SpecConfig(draft=ModelDraft(cfg, params, max_len=64), k=3)
+    done, _ = _run_spec(cfg, params, prompts, news, spec, slots=2,
+                        max_len=64, block_size=8, chunk=8)
+    assert done == refs
+
+
+def test_spec_preemption_stays_exact(rng):
+    """A pool too small for all slots forces eviction mid-speculation;
+    rollback truncation + replay must stay token-identical."""
+    cfg = _dense_cfg()
+    params = api.init(jax.random.PRNGKey(3), cfg)
+    prompts = [rng.integers(1, cfg.vocab_size, size=n).tolist()
+               for n in (20, 22, 25)]
+    news = [12, 12, 12]
+    refs = _engine_refs(cfg, params, prompts, news, max_len=64)
+    spec = SpecConfig(draft=ModelDraft(cfg, params, max_len=64), k=3)
+    done, sch = _run_spec(cfg, params, prompts, news, spec, slots=3,
+                          max_len=64, block_size=8, num_blocks=13, chunk=8)
+    assert done == refs
+    assert sch.pool.peak_in_use <= 12
+    assert sch.pool.blocks_in_use == 0
+
+
+def test_spec_eos_mid_pass(rng):
+    """EOS landing inside an accepted run must cut the output exactly
+    where the engine's one-token loop would have stopped."""
+    cfg = _dense_cfg()
+    params = api.init(jax.random.PRNGKey(4), cfg)
+    prompt = rng.integers(1, cfg.vocab_size, size=9).tolist()
+    eng = Engine(cfg, params, max_len=96)
+    full = eng.generate(np.asarray([prompt], np.int32),
+                        ServeConfig(max_new_tokens=10))[0, 9:].tolist()
+    eos = full[4]                     # stop mid-sequence
+    want = full[:5]
+    spec = SpecConfig(draft=ModelDraft(cfg, params, max_len=96), k=4)
+    sch = Scheduler(cfg, params, slots=1, max_len=96, block_size=8,
+                    chunk=16, spec=spec)
+    sch.submit(Request(rid=0, prompt=prompt, max_new=10, eos=eos))
+    done = sch.run()
+    assert done[0] == want
+    assert sch.pool.blocks_in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# Beam forking on COW tables
+# ---------------------------------------------------------------------------
+
+def test_beam_forks_bit_match_engine(rng):
+    """Each fork must equal an engine run seeded with its first token;
+    COW keeps n=4 peak blocks well under 4× a single stream."""
+    cfg = _dense_cfg()
+    params = api.init(jax.random.PRNGKey(5), cfg)
+    # prompt-heavy (the beam-search regime the COW claim is about):
+    # the 60-token prompt is stored once, each fork privatizes only its
+    # COW'd tail block plus the generated blocks
+    prompt = rng.integers(1, cfg.vocab_size, size=60).tolist()
+    nb, new, max_len = 4, 8, 128
+    eng = Engine(cfg, params, max_len=max_len)
+
+    sch1 = Scheduler(cfg, params, slots=1, max_len=max_len, block_size=8,
+                     chunk=16)
+    sch1.submit(Request(rid=0, prompt=prompt, max_new=new))
+    single = sch1.run()[0]
+
+    sch = Scheduler(cfg, params, slots=nb, max_len=max_len, block_size=8,
+                    chunk=16)
+    sch.submit(Request(rid=0, prompt=prompt, max_new=new, n_best=nb))
+    done = sch.run()
+    assert list(done) == [0] and len(done[0]) == nb
+    assert done[0][0] == single                   # rank 0 == greedy
+    firsts = [out[0] for out in done[0]]
+    assert len(set(firsts)) == nb                 # n distinct first tokens
+    for out in done[0]:
+        forced = eng.generate(
+            np.asarray([prompt + [out[0]]], np.int32),
+            ServeConfig(max_new_tokens=new - 1)
+            )[0, len(prompt) + 1:].tolist()
+        assert out[1:] == forced
+    # COW memory claim: shared prompt prefix stored once
+    assert sch.pool.cow_copies >= 1
+    assert sch.pool.peak_in_use < 2 * sch1.pool.peak_in_use
+    assert sch.pool.blocks_in_use == 0
+
+
+def test_beam_with_speculation(rng):
+    """Both COW consumers composed: n-best forks each running k-draft
+    speculation must still match the engine per rank."""
+    cfg = _dense_cfg()
+    params = api.init(jax.random.PRNGKey(6), cfg)
+    prompt = rng.integers(1, cfg.vocab_size, size=13).tolist()
+    nb, new, max_len = 3, 8, 96
+    base = Scheduler(cfg, params, slots=nb, max_len=max_len, block_size=8,
+                     chunk=16)
+    base.submit(Request(rid=0, prompt=prompt, max_new=new, n_best=nb))
+    want = base.run()
+
+    spec = SpecConfig(draft=ModelDraft(cfg, params, max_len=max_len), k=3)
+    sch = Scheduler(cfg, params, slots=nb, max_len=max_len, block_size=8,
+                    chunk=16, spec=spec)
+    sch.submit(Request(rid=0, prompt=prompt, max_new=new, n_best=nb))
+    assert sch.run() == want
+    assert sch.spec_report()["accept_rate"] == 1.0
+    assert sch.pool.blocks_in_use == 0
+
+
+def test_batcher_rejects_n_best():
+    from repro.serve.batching import ContinuousBatcher
+    cfg = _dense_cfg()
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    cb = ContinuousBatcher(cfg, params, slots=2, max_len=32)
+    with pytest.raises(AssertionError, match="paged Scheduler"):
+        cb.submit(Request(rid=0, prompt=[1, 2], max_new=2, n_best=2))
