@@ -3,7 +3,8 @@
 
 PY ?= python
 
-.PHONY: test bench bench-fast bench-prefill bench-spec bench-report
+.PHONY: test test-multidevice bench bench-fast bench-prefill bench-spec \
+	bench-shard bench-report
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q --durations=10
@@ -23,6 +24,18 @@ bench-prefill:
 bench-spec:
 	PYTHONPATH=src:benchmarks $(PY) -c "import run; \
 	  run.run_benches([run.bench_spec]); run.write_json(run.PR7_JSON)"
+
+# PR 8 multi-device sharded-serving rows only (8-device subprocess),
+# written to the canonical BENCH_pr8.json
+bench-shard:
+	PYTHONPATH=src:benchmarks $(PY) -c "import run; \
+	  run.run_benches([run.bench_shard]); run.write_json(run.PR8_JSON)"
+
+# multi-device test leg: paged sharding + token-identity sweep on an
+# 8-way host mesh (the paged suite re-runs under the same mesh)
+test-multidevice:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+	  $(PY) -m pytest -x -q tests/test_multidevice.py tests/test_paged.py
 
 # perf trajectory across all BENCH_pr*.json artifacts
 bench-report:

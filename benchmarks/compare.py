@@ -8,11 +8,17 @@ their ``.fast`` CI mirrors when present) and prints:
   whose derived payload carries a throughput/speedup/reduction figure),
 * a trajectory table of those headline metrics in PR order, so "what
   did each perf PR actually buy" is one ``make bench-report`` away
-  instead of a JSON spelunking session.
+  instead of a JSON spelunking session,
+* ``BENCH_trajectory.json`` — the same trajectory as machine-readable
+  records ({artifact, row, metric, value} per line of the table), so CI
+  and downstream tooling consume the cross-PR history without scraping
+  the printed table.
 
-Artifacts are data, not code: missing files are skipped with a note
-(e.g. a fresh clone before ``make bench`` has none), and unknown row
-shapes fall back to raw display rather than crashing the report.
+Missing artifacts are skipped with a note (a fresh clone before ``make
+bench`` has none) — but an artifact that EXISTS and fails to parse is a
+hard error (exit 1): a truncated or hand-mangled BENCH_pr*.json
+silently vanishing from the report is how perf regressions hide.
+Unknown row shapes still fall back to raw display rather than crashing.
 """
 from __future__ import annotations
 
@@ -30,7 +36,8 @@ HEADLINE_KEYS = (
     "tok_s", "speedup_vs_base", "speedup_vs_oracle", "speedup_vs_b1",
     "speedup", "reduction", "traffic_reduction", "tokens_per_pass",
     "accepted_frac", "peak_kv_blocks", "ratio", "flat_in_k",
-    "tokens_identical",
+    "tokens_identical", "scaling_1to4", "amortized_tok_s",
+    "per_device_peak_blocks", "bound_ok", "scaling_vs_1dev",
 )
 
 
@@ -50,14 +57,20 @@ def parse_derived(derived: str) -> Dict[str, str]:
     return out
 
 
+class ArtifactError(RuntimeError):
+    """An existing BENCH_pr*.json failed to parse — fail loudly."""
+
+
 def load_artifacts(root: Path = ROOT) -> "List[tuple]":
     arts = []
     for path in sorted(root.glob("BENCH_pr*.json"), key=_pr_key):
         try:
-            rows = json.loads(path.read_text()).get("rows", [])
+            doc = json.loads(path.read_text())
         except (OSError, json.JSONDecodeError) as e:
-            print(f"# skipping {path.name}: {e}")
-            continue
+            raise ArtifactError(f"{path.name}: {e}") from e
+        rows = doc.get("rows")
+        if not isinstance(rows, list):
+            raise ArtifactError(f"{path.name}: no 'rows' list")
         arts.append((path.name, rows))
     return arts
 
@@ -71,23 +84,37 @@ def headline_rows(rows: List[dict]) -> List[dict]:
     return picked
 
 
-def trajectory_table(arts) -> List[str]:
-    """One line per headline metric: artifact, row, metric, value."""
-    lines = [f"{'artifact':<22} {'row':<38} {'metric':<18} value",
-             "-" * 90]
+def trajectory_records(arts) -> List[dict]:
+    """{artifact, row, metric, value} per headline metric, PR order."""
+    recs = []
     for name, rows in arts:
         for r in headline_rows(rows):
             kv = parse_derived(r.get("derived", ""))
             for k in HEADLINE_KEYS:
                 if k in kv:
-                    lines.append(f"{name:<22} {r['name']:<38} "
-                                 f"{k:<18} {kv[k]}")
+                    recs.append({"artifact": name, "row": r["name"],
+                                 "metric": k, "value": kv[k]})
+    return recs
+
+
+def trajectory_table(arts) -> List[str]:
+    """One line per headline metric: artifact, row, metric, value."""
+    lines = [f"{'artifact':<22} {'row':<38} {'metric':<18} value",
+             "-" * 90]
+    for rec in trajectory_records(arts):
+        lines.append(f"{rec['artifact']:<22} {rec['row']:<38} "
+                     f"{rec['metric']:<18} {rec['value']}")
     return lines
 
 
 def main(argv: Optional[List[str]] = None) -> int:
     root = Path(argv[0]) if argv else ROOT
-    arts = load_artifacts(root)
+    try:
+        arts = load_artifacts(root)
+    except ArtifactError as e:
+        print(f"error: unparsable benchmark artifact — {e}",
+              file=sys.stderr)
+        return 1
     if not arts:
         print(f"# no BENCH_pr*.json under {root} — run `make bench` first")
         return 0
@@ -100,6 +127,10 @@ def main(argv: Optional[List[str]] = None) -> int:
     print("\n== perf trajectory ==")
     for line in trajectory_table(arts):
         print(line)
+    out = root / "BENCH_trajectory.json"
+    out.write_text(json.dumps(
+        {"records": trajectory_records(arts)}, indent=2) + "\n")
+    print(f"\n# wrote {out}")
     return 0
 
 

@@ -6,8 +6,10 @@ Usage: PYTHONPATH=src python benchmarks/smoke.py [--fast]
   --fast  only the acceptance-gated row groups: the PR 3 fused-vs-unfused
           rows + dispatch-count metric, the PR 5 paged-vs-dense serving
           rows (BENCH_pr5.fast.json), the PR 6 chunked-prefill
-          kernelization rows (BENCH_pr6.fast.json), and the PR 7
-          speculative-decoding rows (BENCH_pr7.fast.json)
+          kernelization rows (BENCH_pr6.fast.json), the PR 7
+          speculative-decoding rows (BENCH_pr7.fast.json), and the PR 8
+          multi-device sharded-serving rows (BENCH_pr8.fast.json — the
+          8-device arms run in a subprocess, see bench_shard)
 """
 from __future__ import annotations
 
@@ -20,7 +22,8 @@ import run  # benchmarks/run.py (same directory when run as a script)
 def main(argv) -> int:
     fast = "--fast" in argv
     benches = [run.bench_fused, run.bench_decode_dispatch,
-               run.bench_paged, run.bench_prefill, run.bench_spec] if fast \
+               run.bench_paged, run.bench_prefill, run.bench_spec,
+               run.bench_shard] if fast \
         else run.ALL_BENCHES
     # fast mode must not clobber the full-row artifact (unless the
     # caller redirected the output explicitly)

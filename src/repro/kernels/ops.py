@@ -116,6 +116,16 @@ def paged_attention_decode(q, k_pool, v_pool, block_tables, lengths, *,
     tests rely on this)."""
     BS = k_pool.shape[1]
     if _use_pallas() and BS % min(group_size, BS) == 0:
+        # §13: under a multi-device mesh the opaque pallas_call would be
+        # replicated by GSPMD (gathering the sharded pool); run it under
+        # shard_map with heads split instead — bit-identical per head
+        from repro.parallel import shard_kernels as sk
+        routed = sk.route_mesh(q.shape[1], k_pool.shape[2])
+        if routed is not None:
+            return sk.sharded_paged_attention_decode(
+                *routed, q, k_pool, v_pool, block_tables, lengths,
+                group_size=group_size, use_lut=use_lut, scale=scale,
+                window=window)
         return _pad.paged_attention_decode(
             q, k_pool, v_pool, block_tables, lengths,
             group_size=min(group_size, BS), use_lut=use_lut, scale=scale,
@@ -238,6 +248,14 @@ def paged_flash_prefill(q, k_pool, v_pool, block_tables, start, *,
                 f"chose block_q={bq} (requested {block_q}) for chunk "
                 f"C={C}, but C % block_q == {C % bq}; pad the chunk "
                 "(the hot loop must not densify)")
+        # §13: same shard_map head split as paged_attention_decode
+        from repro.parallel import shard_kernels as sk
+        routed = sk.route_mesh(q.shape[1], k_pool.shape[2])
+        if routed is not None:
+            return sk.sharded_paged_flash_prefill(
+                *routed, q, k_pool, v_pool, block_tables, start,
+                window=window, use_lut=use_lut, scale=scale,
+                block_q=block_q)
         return _pfp.paged_flash_prefill(
             q, k_pool, v_pool, block_tables, start, window=window,
             use_lut=use_lut, scale=scale, block_q=block_q,

@@ -7,7 +7,11 @@ pods on a leading "pod" axis (DCN data-parallel domain).
 """
 from __future__ import annotations
 
+import dataclasses
+from typing import Optional
+
 import jax
+import numpy as np
 
 from repro import compat
 
@@ -25,3 +29,49 @@ def make_host_mesh(model: int = 1, data: int = None):
     data = data or (n // model)
     return compat.make_mesh((data, model), ("data", "model"),
                             axis_types=(compat.AxisType.Auto,) * 2)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingMesh:
+    """Device layout of the multi-device paged serving path (DESIGN.md
+    §13). ``mesh`` is the decode-pool (or unified) ("data", "model")
+    mesh the Scheduler shards its KV pools over; ``prefill_mesh`` is the
+    disaggregated prefill pool when one was carved out (None = unified
+    serving: prefill and decode interleave on ``mesh``)."""
+    mesh: object
+    prefill_mesh: Optional[object] = None
+
+    @property
+    def disaggregated(self) -> bool:
+        return self.prefill_mesh is not None
+
+
+def _submesh(devs, data: int, model: int):
+    return jax.sharding.Mesh(
+        np.asarray(devs, dtype=object).reshape(data, model),
+        ("data", "model"))
+
+
+def make_serving_mesh(data: Optional[int] = None, model: int = 1, *,
+                      prefill_data: int = 0, devices=None) -> ServingMesh:
+    """Serving mesh(es) over the host's devices.
+
+    Unified (``prefill_data=0``): one (data × model) mesh over the first
+    data·model devices. Disaggregated: the FIRST ``prefill_data``·model
+    devices become the prefill pool and the next data·model devices the
+    decode pool — two disjoint meshes whose "data" axes should normally
+    match so a handed-off KV block's shard moves straight to its
+    counterpart device (`serve.paged.disagg`, never crossing the data
+    axis). ``data=None`` uses every remaining device."""
+    devs = list(devices if devices is not None else jax.devices())
+    pre = None
+    if prefill_data:
+        need = prefill_data * model
+        assert len(devs) > need, (len(devs), need)
+        pre = _submesh(devs[:need], prefill_data, model)
+        devs = devs[need:]
+    if data is None:
+        data = len(devs) // model
+    assert data * model <= len(devs), (data, model, len(devs))
+    return ServingMesh(mesh=_submesh(devs[:data * model], data, model),
+                       prefill_mesh=pre)

@@ -70,14 +70,41 @@ def loss_fn(params: Dict, cfg: ModelConfig, batch: Dict) -> jax.Array:
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int, *,
-               num_blocks: Optional[int] = None, block_size: int = 16):
+               num_blocks: Optional[int] = None, block_size: int = 16,
+               mesh=None):
     """Dense (L, B, S, …) cache by default; with ``num_blocks`` set, the
     paged block-pool layout (pool + per-request block tables, DESIGN.md
-    §10) for the attention families that support it."""
+    §10) for the attention families that support it. With ``mesh`` also
+    set, the paged pools are placed with the §13 multi-device layout
+    (kv_heads over "data", block ids global, tables replicated) via
+    ``paged_cache_shardings``."""
     if num_blocks is not None:
-        return family(cfg).init_paged_cache(cfg, batch, num_blocks,
-                                            block_size, max_len)
+        cache = family(cfg).init_paged_cache(cfg, batch, num_blocks,
+                                             block_size, max_len)
+        if mesh is not None:
+            cache = jax.device_put(
+                cache, paged_cache_shardings(cfg, cache, mesh))
+        return cache
+    assert mesh is None, "mesh placement is paged-only (DESIGN.md §13)"
     return family(cfg).init_cache(cfg, batch, max_len)
+
+
+def paged_cache_axes(cfg: ModelConfig):
+    """Logical axes tree mirroring init_paged_cache's structure."""
+    return family(cfg).paged_cache_axes(cfg)
+
+
+def paged_cache_shardings(cfg: ModelConfig, cache, mesh):
+    """NamedSharding tree for a paged ``cache`` pytree ({"k","v"} pools
+    plus optionally "bt") under the §13 paged serving rules. ``cache``
+    leaves only need ``.shape``/``.dtype`` (arrays or ShapeDtypeStructs);
+    extra leaves beyond k/v/bt are rejected by the axes-tree zip."""
+    from repro.parallel import sharding as shd
+    axes = paged_cache_axes(cfg)
+    axes = {k: v for k, v in axes.items() if k in cache}
+    shapes = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), dict(cache))
+    return shd.paged_cache_shardings(mesh, axes, shapes)
 
 
 def prefill_step(params: Dict, cfg: ModelConfig, batch: Dict,

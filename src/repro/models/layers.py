@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.kernels import ops
+from repro.parallel import act_sharding
 
 
 # ---------------------------------------------------------------------------
@@ -336,6 +337,11 @@ def apply_attention(p: Dict, cfg: ModelConfig, x: jax.Array,
                 jnp.swapaxes(q, 1, 2), new_cache["k"], new_cache["v"],
                 new_cache["bt"], idx, window=window,
                 use_lut=cfg.use_lut_softmax)
+        # §13 multi-device serving: the pool is kv_head-sharded, so the
+        # attention output arrives head-sharded — all-gather it before
+        # the wo contraction to keep the reduction order (and therefore
+        # the tokens) identical to the single-device engine
+        out = act_sharding.constrain_replicated(out)
         out = jnp.swapaxes(out, 1, 2).astype(x.dtype)
     elif cache is not None and kv_x is None:
         new_cache = write_kv_cache(cache, k, v, cache_index)
@@ -521,6 +527,7 @@ def apply_decoder_layer_fused(lp: Dict, cfg: ModelConfig, x: jax.Array,
             q[:, 0], new_cache["k"], new_cache["v"], new_cache["bt"],
             lengths, group_size=cfg.softmax_group,
             use_lut=cfg.use_lut_softmax, window=window)
+        attn = act_sharding.constrain_replicated(attn)   # §13: pre-wo gather
     else:
         new_cache = write_kv_cache(cache, k, v, cache_index)
         attn = ops.attention_decode(

@@ -201,6 +201,7 @@ def forward(params, cfg, tokens):
 init_cache = T.init_cache
 init_paged_cache = T.init_paged_cache
 cache_axes = T.cache_axes
+paged_cache_axes = T.paged_cache_axes
 
 
 def prefill(params, cfg, tokens, cache):

@@ -170,3 +170,11 @@ def decode_step(params: Dict, cfg: ModelConfig, token: jax.Array,
 def cache_axes(cfg: ModelConfig):
     kv = ("layers", "batch", "seq", "kv_heads", "head_dim")
     return {"k": kv, "v": kv}
+
+
+def paged_cache_axes(cfg: ModelConfig):
+    """Logical axes of the paged layout (``init_paged_cache``): pools
+    (L, NB, BS, Hkv, D), block table (L, B, NBMAX). Consumed by
+    ``parallel.sharding.paged_cache_shardings`` (DESIGN.md §13)."""
+    pool = ("layers", "blocks", "block_tokens", "kv_heads", "head_dim")
+    return {"k": pool, "v": pool, "bt": ("layers", "batch", "table")}

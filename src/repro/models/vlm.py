@@ -23,6 +23,7 @@ axes = T.axes
 init_cache = T.init_cache
 init_paged_cache = T.init_paged_cache
 cache_axes = T.cache_axes
+paged_cache_axes = T.paged_cache_axes
 
 
 def merge_embeds(params: Dict, cfg: ModelConfig, tokens: jax.Array,

@@ -39,6 +39,24 @@ def constrain_residual(x: jax.Array) -> jax.Array:
     return jax.lax.with_sharding_constraint(x, spec)
 
 
+def constrain_replicated(x: jax.Array) -> jax.Array:
+    """Pin ``x`` fully replicated under an ambient multi-device mesh.
+
+    The paged serving layout (DESIGN.md §13) shards ONLY the KV block
+    pools (kv_heads over "data"); attention over them is head-local, so
+    its output comes back sharded on the head dim. This constraint
+    all-gathers that output BEFORE the wo projection: the contraction
+    then runs on fully-replicated operands on every device, in the same
+    reduction order as the single-device engine — which is what keeps
+    multi-device serving token-identical rather than merely close
+    (a sharded contraction would psum partial dots in a different fp32
+    association). No-op outside a mesh context or on a 1-device mesh."""
+    mesh = _ambient_mesh()
+    if mesh is None or _prod(dict(mesh.shape), tuple(mesh.shape)) == 1:
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*([None] * x.ndim)))
+
+
 def constrain_batch_only(x: jax.Array) -> jax.Array:
     mesh = _ambient_mesh()
     if mesh is None or x.ndim < 1:

@@ -30,6 +30,13 @@ REPRO_OPT_PAGEDFLASH   0        off-TPU chunk-prefill/verify attention
                                 round-off, so the Scheduler's
                                 token-identity default stays the
                                 oracle) (here + kernels/ops.py)
+REPRO_OPT_SHARDKV      1        multi-device paged serving shards the
+                                KV block pools over the mesh "data"
+                                axis on kv_heads (DESIGN.md §13); 0 =
+                                fully-replicated pools (the A/B
+                                baseline — outputs identical, per-
+                                device KV bytes ×data larger)
+                                (parallel/sharding.paged_rules)
 REPRO_BASELINE         0        1 = force every REPRO_OPT_* flag off at
                                 once (here)
 REPRO_CHUNK_ORACLE     0        1 = pin every chunked-prefill/verify
@@ -50,6 +57,9 @@ REPRO_BENCH_PR6_JSON   unset    path override for the chunked-prefill
                                 row artifact (benchmarks/run.py)
 REPRO_BENCH_PR7_JSON   unset    path override for the speculative/beam
                                 row artifact (benchmarks/run.py)
+REPRO_BENCH_PR8_JSON   unset    path override for the multi-device
+                                sharded-serving row artifact
+                                (benchmarks/run.py)
 =====================  =======  =========================================
 """
 import os

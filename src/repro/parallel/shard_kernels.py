@@ -1,0 +1,111 @@
+"""shard_map adapters for the paged attention kernels (DESIGN.md §13).
+
+GSPMD can partition the *reference* lowerings of ``ops.paged_attention_
+decode`` / ``ops.paged_flash_prefill`` automatically (they are plain XLA
+ops), but a ``pallas_call`` is an opaque primitive — under a mesh it
+would be fully replicated, gathering the sharded KV pool onto every
+device and erasing the §13 memory win. These wrappers run the kernels
+under ``shard_map`` with the HEAD dims sharded on the mesh "model"
+axis:
+
+* q heads H and pool kv_heads Hkv are split contiguously, so with GQA
+  group size G = H/Hkv every shard keeps whole query groups and the
+  kernels' local h → h//G mapping is unchanged;
+* block tables / lengths / start are replicated (block ids are global);
+* per-(batch, head) programs are independent — no cross-device term
+  exists in attention over distinct heads — so the sharded composition
+  is BIT-identical to the unsharded kernel, not merely close.
+
+The head dim is sharded on "model" (not "data") because the §13 paged
+layout already spends "data" on the kv_heads dim of the *pool at rest*;
+under ``shard_map`` both placements compose with the same specs. Use
+``head_shard_axis`` to pick the widest eligible axis.
+
+``ops`` routes through here when a multi-device mesh is ambient at
+trace time and the head counts divide; ``_entered()`` guards the
+re-entrant ``ops`` call inside the shard_map body.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+_tls = threading.local()
+
+
+def _entered() -> bool:
+    return getattr(_tls, "inside", False)
+
+
+@contextlib.contextmanager
+def _enter():
+    prev = _entered()
+    _tls.inside = True
+    try:
+        yield
+    finally:
+        _tls.inside = prev
+
+
+def head_shard_axis(mesh, num_heads: int, num_kv_heads: int,
+                    preferred=("model", "data")) -> Optional[str]:
+    """The first mesh axis (size > 1) that divides BOTH head counts —
+    contiguous splits then keep GQA groups whole per shard. None when no
+    axis qualifies (caller should run the kernel unsharded)."""
+    axes = dict(mesh.shape)
+    for name in preferred:
+        n = axes.get(name, 1)
+        if n > 1 and num_kv_heads % n == 0 and num_heads % n == 0:
+            return name
+    return None
+
+
+def route_mesh(num_heads: int, num_kv_heads: int):
+    """(mesh, axis) when the ambient mesh wants the shard_map kernel
+    path, else None. Never routes from inside a shard_map body."""
+    if _entered():
+        return None
+    from repro.parallel.act_sharding import _ambient_mesh
+    mesh = _ambient_mesh()
+    if mesh is None:
+        return None
+    ax = head_shard_axis(mesh, num_heads, num_kv_heads)
+    return (mesh, ax) if ax is not None else None
+
+
+def sharded_paged_attention_decode(mesh, ax, q, k_pool, v_pool,
+                                   block_tables, lengths, **kw):
+    """q (B, H, D), pools (NB, BS, Hkv, D) → (B, H, D); heads on ``ax``."""
+    from repro.kernels import ops
+
+    def body(q_, k_, v_, bt_, ln_):
+        with _enter():
+            return ops.paged_attention_decode(q_, k_, v_, bt_, ln_, **kw)
+
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(None, ax, None), P(None, None, ax, None),
+                  P(None, None, ax, None), P(None, None), P(None)),
+        out_specs=P(None, ax, None), check_rep=False)
+    return fn(q, k_pool, v_pool, block_tables, lengths)
+
+
+def sharded_paged_flash_prefill(mesh, ax, q, k_pool, v_pool,
+                                block_tables, start, **kw):
+    """q (B, H, C, D), pools (NB, BS, Hkv, D) → (B, H, C, D)."""
+    from repro.kernels import ops
+
+    def body(q_, k_, v_, bt_, st_):
+        with _enter():
+            return ops.paged_flash_prefill(q_, k_, v_, bt_, st_, **kw)
+
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(None, ax, None, None), P(None, None, ax, None),
+                  P(None, None, ax, None), P(None, None), P(None)),
+        out_specs=P(None, ax, None, None), check_rep=False)
+    return fn(q, k_pool, v_pool, block_tables, start)

@@ -71,6 +71,48 @@ def decode_rules() -> Rules:
     return DECODE_RULES if opt("SEQKV") else SERVE_RULES
 
 
+# Paged serving layout (DESIGN.md §13): the K/V block pools
+# (L, NB, BS, Hkv, D) are the only sharded tensors of the paged engine.
+# Block ids stay GLOBAL — the "blocks" dim is never split, so every
+# device holds its shard of every block and the host-side KVBlockPool
+# bookkeeping (refcounts, COW, prefix hashes) is mesh-oblivious. Each
+# block's *contents* shard over "data" on the kv_heads dim — a batch dim
+# of attention, so no contraction ever crosses shards and multi-device
+# serving stays bit-identical to single-device (the all-gather of the
+# head-sharded attention output happens before wo via
+# ``act_sharding.constrain_replicated``). Block tables and positions are
+# tiny host-side metadata: replicated. head_dim and block_tokens are
+# contraction dims of the attention einsums — splitting them would
+# reassociate the fp32 reductions and break token identity, so they
+# carry no candidates at all.
+PAGED_SERVE_RULES: Rules = {
+    "layers": (),
+    "blocks": (),                 # global block ids — never sharded
+    "block_tokens": (),           # contraction dim (p·v) — keep local
+    "kv_heads": (("data",), ("model",)),
+    "head_dim": (),               # contraction dim (q·k) — keep local
+    "batch": (),                  # block-table slot dim: host-replicated
+    "table": (),                  # block-table entries: host-replicated
+}
+
+
+def paged_rules() -> Rules:
+    """PAGED_SERVE_RULES, or the fully-replicated baseline layout under
+    ``REPRO_OPT_SHARDKV=0`` / ``REPRO_BASELINE=1`` (A/B switch: the
+    multi-device engine then runs the pool replicated like PR 7)."""
+    from repro.parallel.flags import opt
+    if not opt("SHARDKV"):
+        return {name: () for name in PAGED_SERVE_RULES}
+    return PAGED_SERVE_RULES
+
+
+def paged_cache_shardings(mesh: Mesh, cache_axes_tree, cache_shape_tree):
+    """NamedSharding tree for a paged cache ({"k","v"} pools (+"bt")
+    with ``models.api.paged_cache_axes`` logical names)."""
+    return tree_shardings(mesh, cache_axes_tree, cache_shape_tree,
+                          paged_rules())
+
+
 def train_rules() -> Rules:
     """TRAIN_RULES, with the expert dim on "model" (the §Perf-winning EP
     layout; gradient all-reduces of expert weights shrink 2.6x and the

@@ -5,6 +5,7 @@ chunked-prefill scheduler that replaces the dense per-slot cache of
 decode kernel — plus n-best beam forking and k-draft speculative decode
 over the same block tables."""
 from repro.serve.paged.block_pool import KVBlockPool, prefix_hashes
+from repro.serve.paged.disagg import DisaggScheduler
 from repro.serve.paged.scheduler import Scheduler
 
-__all__ = ["KVBlockPool", "Scheduler", "prefix_hashes"]
+__all__ = ["DisaggScheduler", "KVBlockPool", "Scheduler", "prefix_hashes"]

@@ -25,10 +25,14 @@ and copies the contents (the scheduler owns the device-side copy — the
 pool only does the bookkeeping). Beam / parallel sampling and
 speculative rollback are built on these three primitives.
 
-Stats counters (cheap ints, never reset by the pool): ``prefix_hits`` /
-``prefix_misses`` count ``match_prefix`` probes per full block,
-``evictions`` counts cached blocks reclaimed LRU-first by ``alloc``,
-``cow_copies`` counts ``cow`` calls.
+Stats counters (cheap ints): ``prefix_hits`` / ``prefix_misses`` count
+``match_prefix`` probes per full block, ``evictions`` counts cached
+blocks reclaimed LRU-first by ``alloc``, ``cow_copies`` counts ``cow``
+calls, and ``peak_in_use`` is the occupancy high-water mark. A
+long-running holder (one scheduler serving several benchmark arms)
+calls ``reset_stats`` between arms so per-arm numbers are not
+contaminated by earlier runs; the reset touches only the counters —
+allocation state, refcounts and the prefix cache are untouched.
 """
 from __future__ import annotations
 
@@ -159,7 +163,20 @@ class KVBlockPool:
         return {"prefix_hits": self.prefix_hits,
                 "prefix_misses": self.prefix_misses,
                 "evictions": self.evictions,
-                "cow_copies": self.cow_copies}
+                "cow_copies": self.cow_copies,
+                "peak_in_use": self.peak_in_use,
+                "blocks_in_use": self.blocks_in_use}
+
+    def reset_stats(self) -> None:
+        """Zero the counters and re-seat the high-water mark at the
+        CURRENT occupancy (not zero — blocks still referenced by live
+        requests are real usage the next arm inherits). Allocation and
+        prefix-cache state are untouched."""
+        self.prefix_hits = 0
+        self.prefix_misses = 0
+        self.evictions = 0
+        self.cow_copies = 0
+        self.peak_in_use = self.blocks_in_use
 
     # -- prefix cache ----------------------------------------------------
     def is_cached(self, bid: int) -> bool:

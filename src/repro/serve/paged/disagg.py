@@ -1,0 +1,151 @@
+"""Disaggregated prefill/decode serving (DESIGN.md §13, first cut).
+
+Production serving separates the two phases of a request's life onto
+different device pools: prefill is compute-bound (long chunked matmuls,
+one request at a time saturates), decode is weight-stream-bound (wants
+the biggest possible concurrent batch amortizing each RCW weight pass).
+Interleaving them on one pool makes each phase worse at the other's
+job — a prefill chunk stalls every decode slot for its duration.
+
+``DisaggScheduler`` composes two ordinary ``Scheduler`` instances over
+the two pools of a ``launch.mesh.make_serving_mesh(prefill_data=...)``
+split:
+
+* the **prefill** scheduler runs with a ``handoff`` callback — when a
+  prompt finishes prefilling, instead of decoding locally it gathers the
+  request's KV blocks (``gather_blocks``), frees its slot, and queues a
+  ``_Handoff``;
+* the driver drains the queue into the **decode** scheduler
+  (``adopt``): a cross-mesh ``jax.device_put`` moves each KV block's
+  data shard straight to its counterpart decode device (blocks never
+  cross the "data" axis, never gather), fresh blocks are allocated in
+  the decode pool, and the stream continues greedy decode from the
+  handed-off first token.
+
+Token identity: the decode side starts from bit-identical KV (the
+payload is a device-side copy, the transfer is lossless) and the same
+pending token, and greedy decode is scheduling-order independent — so
+outputs match unified single-pool serving exactly, which is asserted in
+tests/test_multidevice.py. Backpressure is by refusal: a handoff whose
+decode pool lacks a slot or blocks waits in the pending queue (prefill
+keeps working; its own slot was already freed).
+
+This is the *protocol* cut — both pools live in one host process and
+the payload moves through ``device_put`` rather than an interconnect
+fabric; ``sim.perf_model.disaggregated_serving_report`` projects what
+the overlap buys on real RCW-CIM hardware where the two pools genuinely
+run concurrently.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Deque, Dict, List, Optional
+
+from collections import deque
+
+from repro.configs.base import ModelConfig
+from repro.serve.batching import Request
+from repro.serve.paged.scheduler import Scheduler
+from repro.serve.spec_decode import SpecConfig
+
+
+@dataclasses.dataclass
+class _Handoff:
+    """A prefilled sequence in flight between the pools: the request
+    entry (prompt + any pre-preemption output), the first generated
+    token, and the gathered (L, nb, BS, Hkv, D) K/V payload."""
+    entry: object
+    first_tok: int
+    kv_blocks: tuple
+
+    @property
+    def nbytes(self) -> int:
+        k, v = self.kv_blocks
+        return k.nbytes + v.nbytes
+
+
+class DisaggScheduler:
+    """Two-pool serving: ``prefill`` chunks prompts and hands finished
+    sequences to ``decode``, which owns all token generation (including
+    speculative decode — drafts never run on the prefill pool).
+
+    ``prefill_kw`` / ``decode_kw`` override per-pool Scheduler knobs
+    (slots, num_blocks, chunk, ...); ``spec`` applies to the decode pool
+    only. Meshes may be None (single-device protocol tests)."""
+
+    def __init__(self, cfg: ModelConfig, params, *,
+                 prefill_mesh=None, decode_mesh=None,
+                 slots: int = 4, max_len: int = 512, block_size: int = 16,
+                 chunk: int = 32, spec: Optional[SpecConfig] = None,
+                 prefill_kw: Optional[Dict] = None,
+                 decode_kw: Optional[Dict] = None):
+        base = dict(slots=slots, max_len=max_len, block_size=block_size,
+                    chunk=chunk)
+        self.prefill = Scheduler(
+            cfg, params, mesh=prefill_mesh, handoff=self._on_handoff,
+            # prefill never decodes: headroom-block demands stay, but
+            # prefix sharing still pays off across prompts
+            **{**base, **(prefill_kw or {})})
+        self.decode = Scheduler(
+            cfg, params, mesh=decode_mesh, spec=spec,
+            **{**base, **(decode_kw or {})})
+        self.pending: Deque[_Handoff] = deque()
+        self.handoffs = 0
+        self.handoff_bytes = 0
+
+    # -- prefill-side callback -------------------------------------------
+    def _on_handoff(self, sched: Scheduler, si: int, seq, first: int):
+        payload = sched.gather_blocks(seq.table)
+        h = _Handoff(entry=seq.entry, first_tok=first, kv_blocks=payload)
+        sched._release_slot(si)
+        self.pending.append(h)
+        self.handoffs += 1
+        self.handoff_bytes += h.nbytes
+
+    # -- driver -----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.prefill.submit(req)
+
+    def _drain(self) -> None:
+        while self.pending and self.decode.can_adopt(self.pending[0].entry):
+            h = self.pending.popleft()
+            self.decode.adopt(h.entry, h.first_tok, h.kv_blocks)
+
+    def run(self, max_ticks: int = 100_000) -> Dict[int, List[int]]:
+        """Drive both pools until everything drains. One tick = one
+        prefill chunk round + one decode round — on real hardware these
+        overlap; here they serialize, so wall-clock is NOT the metric
+        (the perf_model projects the overlap; tests assert tokens)."""
+        from repro.serve.paged.scheduler import _Seq
+        for _ in range(max_ticks):
+            p, d = self.prefill, self.decode
+            busy = self.pending or p.queue or d.queue \
+                or any(isinstance(s, _Seq) for s in p.slots) \
+                or any(isinstance(s, _Seq) for s in d.slots)
+            if not busy:
+                break
+            p._admit()
+            p._prefill_tick()
+            self._drain()
+            # a preempted adoptee re-enters through the decode pool's own
+            # queue (local chunked re-prefill — no second handoff)
+            d._admit()
+            d._prefill_tick()
+            if d.spec is not None:
+                d._spec_tick()
+            else:
+                d._grow_or_preempt()
+                d._decode_tick()
+        assert not self.pending and not self.prefill.queue, "stalled"
+        return self.decode.done
+
+    # -- reporting ---------------------------------------------------------
+    def report(self) -> Dict[str, float]:
+        return {
+            "handoffs": self.handoffs,
+            "handoff_bytes": self.handoff_bytes,
+            "prefill_peak_blocks": self.prefill.pool.peak_in_use,
+            "decode_peak_blocks": self.decode.pool.peak_in_use,
+            "decode_per_device_peak_blocks":
+                self.decode.per_device_peak_blocks(),
+        }

@@ -79,8 +79,9 @@ rides the same kernel path with S = k+1.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-from typing import Deque, Dict, List, Optional, Union
+from typing import Callable, Deque, Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -139,13 +140,32 @@ class Scheduler:
     includes the reserved null block; it must be at least
     max_len//block_size + 2 so a lone request can always run. Pass
     ``spec=SpecConfig(draft, k)`` to replace the one-token decode tick
-    with a k-draft speculative verify pass (DESIGN.md §12)."""
+    with a k-draft speculative verify pass (DESIGN.md §12).
+
+    Multi-device (DESIGN.md §13): with ``mesh`` set (a ("data","model")
+    ``launch.mesh`` serving mesh) the K/V pools are sharded over "data"
+    on the kv_heads dim — block ids stay global, so ALL host-side pool
+    bookkeeping below is mesh-oblivious — params and block tables are
+    replicated, and the step jits pin in/out shardings so the pools
+    never silently gather. Per-device KV bytes shrink by the data-axis
+    size while outputs stay token-identical to the single-device engine
+    (no contraction dim is ever sharded; see
+    ``parallel.sharding.PAGED_SERVE_RULES``).
+
+    ``handoff`` (disaggregated prefill, §13): a callback
+    ``handoff(sched, slot, seq, first_token)`` invoked INSTEAD of local
+    decode when a single-stream request finishes prefill — the callback
+    owns the sequence from here (gather the KV payload via
+    ``gather_blocks``, free the slot with ``_release_slot``, and hand
+    the request to a decode-pool scheduler's ``adopt``)."""
 
     def __init__(self, cfg: ModelConfig, params, slots: int = 4,
                  max_len: int = 512, block_size: int = 16,
                  num_blocks: Optional[int] = None, chunk: int = 32,
                  prefix_cache: bool = True,
-                 spec: Optional[SpecConfig] = None):
+                 spec: Optional[SpecConfig] = None,
+                 mesh=None,
+                 handoff: Optional[Callable] = None):
         assert cfg.family in ("dense", "moe", "vlm"), cfg.family
         assert max_len % block_size == 0, (max_len, block_size)
         self.cfg, self.params = cfg, params
@@ -159,9 +179,11 @@ class Scheduler:
         self.pool = KVBlockPool(num_blocks, block_size)
         self.prefix_cache = prefix_cache
         self.spec = spec
+        self.mesh = mesh
+        self.handoff = handoff
 
         cache = api.init_cache(cfg, slots, max_len, num_blocks=num_blocks,
-                               block_size=block_size)
+                               block_size=block_size, mesh=mesh)
         self.kv = {"k": cache["k"], "v": cache["v"]}   # (L, NB, BS, Hkv, D)
         self.num_layers = cache["k"].shape[0]
 
@@ -178,20 +200,60 @@ class Scheduler:
         self.spec_drafted = 0
         self.spec_accepted = 0
 
+        jit_kw: Dict = {}
+        copy_kw: Dict = {"donate_argnums": 0}
+        gather_kw: Dict = {}
+        adopt_kw: Dict = {"donate_argnums": 0}
+        if mesh is not None:
+            from repro.parallel import sharding as shd
+            rep = shd.replicated(mesh)
+            self.params = jax.device_put(params, rep)
+            pool_sh = self.kv["k"].sharding      # §13 paged placement
+            self._pool_sh, self._rep = pool_sh, rep
+            cache_sh = {"k": pool_sh, "v": pool_sh, "bt": rep}
+            jit_kw = dict(in_shardings=(rep, rep, cache_sh, rep),
+                          out_shardings=(rep, cache_sh))
+            copy_kw.update(in_shardings=(pool_sh, rep, rep),
+                           out_shardings=pool_sh)
+            # handoff payload (L, nb, BS, Hkv, D): same rank as the pool,
+            # so it reuses the pool's spec — each data shard of a block
+            # moves to (or arrives from) its counterpart device
+            pay_sh = jax.sharding.NamedSharding(mesh, pool_sh.spec)
+            gather_kw = dict(in_shardings=(pool_sh, rep),
+                             out_shardings=pay_sh)
+            adopt_kw.update(in_shardings=(pool_sh, rep, pay_sh),
+                            out_shardings=pool_sh)
         self._decode = jax.jit(
-            lambda p, t, c, i: api.serve_step(p, cfg, t, c, i))
+            lambda p, t, c, i: api.serve_step(p, cfg, t, c, i), **jit_kw)
         self._chunk = jax.jit(
             lambda p, t, c, s: api.prefill_chunk_step(
-                p, cfg, {"tokens": t}, c, s))
+                p, cfg, {"tokens": t}, c, s), **jit_kw)
         if spec is not None:
             assert spec.k >= 1, spec.k
             self._verify = jax.jit(
-                lambda p, t, c, s: api.verify_step(p, cfg, t, c, s))
+                lambda p, t, c, s: api.verify_step(p, cfg, t, c, s),
+                **jit_kw)
         # COW device copy: one pool row dst ← src across the layer axis
         # (donated so the pool is updated in place, not duplicated)
         self._blk_copy = jax.jit(
             lambda pool, dst, src: pool.at[:, dst].set(pool[:, src]),
-            donate_argnums=0)
+            **copy_kw)
+        # §13 handoff: gather a table's blocks / scatter an adopted payload
+        self._blk_gather = jax.jit(lambda pool, ids: pool[:, ids],
+                                   **gather_kw)
+        self._adopt_copy = jax.jit(
+            lambda pool, ids, blk: pool.at[:, ids].set(
+                blk.astype(pool.dtype)), **adopt_kw)
+
+    def _ctx(self):
+        """Ambient-mesh context for every jit call: the §13 sharding
+        constraints inside the model (``constrain_replicated``) resolve
+        bare PartitionSpecs against the mesh installed here. nullcontext
+        single-device — the trace then contains no constraints at all."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        from repro import compat
+        return compat.set_mesh(self.mesh)
 
     # -- public API ------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -199,6 +261,10 @@ class Scheduler:
         assert n >= 1 and n + req.max_new - 1 <= self.max_len, \
             (n, req.max_new, self.max_len)
         assert 1 <= req.n_best <= self.n_slots, (req.n_best, self.n_slots)
+        # disaggregated prefill hands off single streams only: a beam
+        # group forks AFTER prefill, which is exactly the work this
+        # scheduler is giving away (§13)
+        assert self.handoff is None or req.n_best == 1, req.n_best
         self.queue.append(_Entry(req))
 
     def run(self, max_ticks: int = 100_000) -> Dict[int, List]:
@@ -218,7 +284,39 @@ class Scheduler:
                 self._decode_tick()
         return self.done
 
-    # -- memory accounting ----------------------------------------------
+    # -- stats / memory accounting ---------------------------------------
+    def reset_stats(self) -> None:
+        """Zero every run counter — pool stats (incl. the occupancy
+        high-water mark), per-tick traces, and speculation counters — so
+        benchmark arms that reuse one scheduler for a warm-up pass and a
+        timed pass report the timed pass only. Serving state (pool
+        allocation, prefix cache, live slots) is untouched."""
+        self.pool.reset_stats()
+        self.tick_active = []
+        self.tick_prefill = []
+        self.tick_emitted = []
+        self.spec_passes = 0
+        self.spec_drafted = 0
+        self.spec_accepted = 0
+
+    def data_shards(self) -> int:
+        """How many devices each KV block is split across (the §13 "data"
+        axis, via the realized pool sharding — 1 when unsharded)."""
+        if self.mesh is None:
+            return 1
+        k = self.kv["k"]
+        shard = k.sharding.shard_shape(k.shape)
+        return int(np.prod(k.shape)) // int(np.prod(shard))
+
+    def per_device_peak_blocks(self) -> float:
+        """Peak per-device KV footprint in block-equivalents: every
+        block id lives on every data shard at 1/data_shards size, so the
+        bound per-device ≤ peak/data + 1 is exact by construction."""
+        return self.pool.peak_in_use / self.data_shards()
+
+    def kv_bytes_peak_per_device(self) -> float:
+        return self.kv_bytes_peak() / self.data_shards()
+
     def _block_bytes(self) -> int:
         k = self.kv["k"]          # (L, NB, BS, Hkv, D)
         per_tok = int(np.prod(k.shape[3:])) * k.dtype.itemsize
@@ -328,9 +426,10 @@ class Scheduler:
             buf[0, :take] = toks[seq.pos:seq.pos + take]
             cache = {"k": self.kv["k"], "v": self.kv["v"],
                      "bt": self._layered_bt(self._bt_row(seq)[None])}
-            logits, cache = self._chunk(
-                self.params, jnp.asarray(buf), cache,
-                jnp.asarray([seq.pos], jnp.int32))
+            with self._ctx():
+                logits, cache = self._chunk(
+                    self.params, jnp.asarray(buf), cache,
+                    jnp.asarray([seq.pos], jnp.int32))
             self.kv = {"k": cache["k"], "v": cache["v"]}
             seq.pos += take
             if seq.pos < n:
@@ -345,7 +444,14 @@ class Scheduler:
             seq.pos = n
             nb = seq.entry.req.n_best
             if nb == 1:
-                self._emit(si, int(jnp.argmax(logits[0, take - 1])))
+                first = int(jnp.argmax(logits[0, take - 1]))
+                if self.handoff is not None:
+                    # disaggregated serving (§13): prefill's job ends
+                    # here — the callback ships the KV payload + first
+                    # token to the decode pool instead of decoding
+                    self.handoff(self, si, seq, first)
+                else:
+                    self._emit(si, first)
                 continue
             # beam fork (§12): rank r continues the r-th best first
             # token; tables are forked by refcount — the first decode
@@ -411,8 +517,9 @@ class Scheduler:
         """Device-side COW copy of one pool block (all layers, K and V)."""
         d = jnp.asarray(dst, jnp.int32)
         s = jnp.asarray(src, jnp.int32)
-        self.kv = {"k": self._blk_copy(self.kv["k"], d, s),
-                   "v": self._blk_copy(self.kv["v"], d, s)}
+        with self._ctx():
+            self.kv = {"k": self._blk_copy(self.kv["k"], d, s),
+                       "v": self._blk_copy(self.kv["v"], d, s)}
 
     def _ensure_capacity(self, si: int, last_pos: int) -> bool:
         """Make slot ``si`` writable through position ``last_pos``: grow
@@ -479,9 +586,10 @@ class Scheduler:
             pos[si] = self.slots[si].pos
         cache = {"k": self.kv["k"], "v": self.kv["v"],
                  "bt": self._layered_bt(bt)}
-        logits, cache = self._decode(
-            self.params, jnp.asarray(self.tokens), cache,
-            jnp.asarray(pos, jnp.int32))
+        with self._ctx():
+            logits, cache = self._decode(
+                self.params, jnp.asarray(self.tokens), cache,
+                jnp.asarray(pos, jnp.int32))
         self.kv = {"k": cache["k"], "v": cache["v"]}
         nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
         self.tick_emitted.append(len(live))
@@ -524,9 +632,10 @@ class Scheduler:
             pos[si] = seq.pos
         cache = {"k": self.kv["k"], "v": self.kv["v"],
                  "bt": self._layered_bt(bt)}
-        logits, cache = self._verify(
-            self.params, jnp.asarray(buf), cache,
-            jnp.asarray(pos, jnp.int32))
+        with self._ctx():
+            logits, cache = self._verify(
+                self.params, jnp.asarray(buf), cache,
+                jnp.asarray(pos, jnp.int32))
         self.kv = {"k": cache["k"], "v": cache["v"]}
         tgt = np.asarray(jnp.argmax(logits, -1), np.int32)   # (B, K+1)
         emitted = 0
@@ -557,6 +666,55 @@ class Scheduler:
         keep = max(-(-seq.pos // self.block_size), 1)
         while len(seq.table) > keep:
             self.pool.release(seq.table.pop())
+
+    # -- disaggregated prefill→decode handoff (§13) ----------------------
+    def gather_blocks(self, table: List[int]):
+        """Device-side (L, nb, BS, Hkv, D) copies of ``table``'s K and V
+        blocks — the handoff payload. Sharded exactly like the pool, so
+        a cross-mesh ``device_put`` moves each data shard straight to
+        its counterpart device without ever gathering a full block."""
+        ids = jnp.asarray(np.asarray(table, np.int32))
+        with self._ctx():
+            return (self._blk_gather(self.kv["k"], ids),
+                    self._blk_gather(self.kv["v"], ids))
+
+    def can_adopt(self, entry: _Entry) -> bool:
+        """Room for one handed-off sequence: a free slot plus its prompt
+        blocks and one block of decode headroom."""
+        need = -(-len(entry.tokens) // self.block_size)
+        return any(s is None for s in self.slots) \
+            and self.pool.num_free >= need + 1
+
+    def adopt(self, entry: _Entry, first_tok: int, kv_blocks) -> None:
+        """Install a sequence prefilled on ANOTHER scheduler: allocate
+        private blocks, scatter the transferred payload into them, then
+        emit the prefill side's first token exactly as a local prefill
+        completion would — greedy decode from identical KV makes the
+        handed-off stream token-identical to unified serving. Adopted
+        blocks are private (no prefix-cache registration, first cut); a
+        later preemption replays the request locally from its tokens."""
+        assert self.can_adopt(entry), "call can_adopt first"
+        toks = entry.tokens
+        n = len(toks)
+        table = []
+        for _ in range(-(-n // self.block_size)):
+            bid = self.pool.alloc()
+            assert bid is not None
+            table.append(bid)
+        k_blk, v_blk = kv_blocks
+        if self.mesh is not None:
+            sh = jax.sharding.NamedSharding(self.mesh, self._pool_sh.spec)
+            k_blk = jax.device_put(k_blk, sh)     # shard → shard move
+            v_blk = jax.device_put(v_blk, sh)
+        ids = jnp.asarray(np.asarray(table, np.int32))
+        with self._ctx():
+            self.kv = {"k": self._adopt_copy(self.kv["k"], ids, k_blk),
+                       "v": self._adopt_copy(self.kv["v"], ids, v_blk)}
+        si = next(i for i, s in enumerate(self.slots) if s is None)
+        self.slots[si] = _Seq(entry=entry, table=table, n_shared=0,
+                              pos=n, phase="decode", ticket=self._ticket)
+        self._ticket += 1
+        self._emit(si, first_tok)
 
     def _emit(self, si: int, tok: int) -> None:
         seq = self.slots[si]

@@ -255,6 +255,82 @@ def chunk_prefill_residency_report(chunk: int = 32, prefix_tokens: int = 1024,
 
 
 # ---------------------------------------------------------------------------
+# Multi-device serving (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def sharded_kv_scaleout_report(data: int, per_device_blocks: int,
+                               tokens_per_slot: int = 256,
+                               block_size: int = 16,
+                               rcw: bool = True, fusion: bool = True,
+                               ctx: int = 1024) -> Dict[str, float]:
+    """What sharding the KV pool over ``data`` devices buys (DESIGN.md
+    §13): each device holds a 1/data slice of every block, so a fixed
+    per-device block budget aggregates to ``data×`` KV capacity, which
+    admits ``data×`` concurrent decode slots — and concurrent slots are
+    the DENOMINATOR of the RCW weight-stream amortization. Compute is
+    replicated (this layout trades FLOPs for stream amortization and KV
+    capacity, the binding resources on RCW-CIM); the model therefore
+    scales only the amortization term, not MAC/NL."""
+    assert data >= 1 and per_device_blocks >= 1
+    blocks_per_slot = -(-tokens_per_slot // block_size) + 1
+    slots = max((data * per_device_blocks) // blocks_per_slot, 1)
+    slots_1dev = max(per_device_blocks // blocks_per_slot, 1)
+    lat = amortized_decode_latency(slots, rcw, fusion, ctx)
+    lat_1 = amortized_decode_latency(slots_1dev, rcw, fusion, ctx)
+    return {
+        "data": data,
+        "per_device_blocks": per_device_blocks,
+        "concurrent_slots": slots,
+        "tokens_per_s": slots / lat,
+        "tokens_per_s_1dev": slots_1dev / lat_1,
+        "scaling_vs_1dev": (slots / lat) / (slots_1dev / lat_1),
+    }
+
+
+def disaggregated_serving_report(n_requests: int = 16,
+                                 prompt_tokens: int = 1024,
+                                 new_tokens: int = 64,
+                                 decode_slots: int = 16,
+                                 kv_handoff_bytes: float = None,
+                                 interconnect_gbps: float = 50.0,
+                                 rcw: bool = True, fusion: bool = True,
+                                 chip: RCWCIMChip = RCWCIM
+                                 ) -> Dict[str, float]:
+    """Projected gain of disaggregated prefill/decode pools over unified
+    interleaved serving (DESIGN.md §13). Unified: every prefill chunk
+    stalls all decode slots, so wall-clock ≈ prefill + decode serialized.
+    Disaggregated: the pools overlap in steady state — wall-clock ≈
+    max(prefill, decode) + the KV handoff transfer (per-request KV bytes
+    over the interconnect; defaults to FP16 K+V for ``prompt_tokens``
+    over the Llama GEOM). The host CPU testbed serializes the two pools
+    (one process), so this projection — not wall-clock — is the BENCH
+    row for the disaggregated arm; tests assert token identity instead."""
+    d_head = GEOM.d_model // GEOM.heads
+    if kv_handoff_bytes is None:
+        kv_handoff_bytes = (2 * GEOM.layers * prompt_tokens
+                            * GEOM.heads * d_head * 2)     # K+V, FP16
+    t_pre = n_requests * prefill_latency(Dataflow.WS_OCS, prompt_tokens,
+                                         rcw=rcw, chip=chip)
+    t_dec = n_requests * new_tokens \
+        * amortized_decode_latency(decode_slots, rcw, fusion,
+                                   ctx=prompt_tokens, chip=chip)
+    t_xfer = n_requests * kv_handoff_bytes / (interconnect_gbps * 1e9)
+    unified = t_pre + t_dec
+    disagg = max(t_pre, t_dec) + t_xfer
+    return {
+        "prefill_s": t_pre,
+        "decode_s": t_dec,
+        "handoff_s": t_xfer,
+        "handoff_bytes_per_req": float(kv_handoff_bytes),
+        "unified_s": unified,
+        "disagg_s": disagg,
+        "speedup": unified / disagg,
+        "tokens_per_s_unified": n_requests * new_tokens / unified,
+        "tokens_per_s_disagg": n_requests * new_tokens / disagg,
+    }
+
+
+# ---------------------------------------------------------------------------
 # Prefill — Fig 9(a), Fig 8
 # ---------------------------------------------------------------------------
 

@@ -104,7 +104,26 @@ def test_pool_prefix_stats_counters():
     assert pool.match_prefix(toks[:4]) == [a, b]
     assert (pool.prefix_hits, pool.prefix_misses) == (5, 3)
     assert pool.stats == {"prefix_hits": 5, "prefix_misses": 3,
-                          "evictions": 0, "cow_copies": 0}
+                          "evictions": 0, "cow_copies": 0,
+                          "peak_in_use": 2, "blocks_in_use": 2}
+
+
+def test_pool_stats_reset_and_high_water():
+    """reset_stats() zeroes the counters and re-bases the occupancy
+    high-water mark at the CURRENT occupancy, so back-to-back benchmark
+    arms on one pool don't inherit each other's peaks (PR 8)."""
+    pool = KVBlockPool(num_blocks=8, block_size=2)
+    blocks = [pool.alloc() for _ in range(4)]
+    assert pool.peak_in_use == 4
+    for b in blocks[2:]:
+        pool.release(b)
+    assert pool.peak_in_use == 4 and pool.blocks_in_use == 2
+    pool.reset_stats()
+    assert pool.peak_in_use == 2          # re-based, not zeroed
+    assert (pool.prefix_hits, pool.prefix_misses,
+            pool.evictions, pool.cow_copies) == (0, 0, 0, 0)
+    pool.alloc()
+    assert pool.peak_in_use == 3
 
 
 def test_pool_cow_fork_primitives():
