@@ -4,7 +4,7 @@
 PY ?= python
 
 .PHONY: test test-multidevice bench bench-fast bench-prefill bench-spec \
-	bench-shard bench-report
+	bench-shard bench-sparse bench-report
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q --durations=10
@@ -30,6 +30,12 @@ bench-spec:
 bench-shard:
 	PYTHONPATH=src:benchmarks $(PY) -c "import run; \
 	  run.run_benches([run.bench_shard]); run.write_json(run.PR8_JSON)"
+
+# PR 9 structured N:M sparsity rows only, written to the canonical
+# BENCH_pr9.json
+bench-sparse:
+	PYTHONPATH=src:benchmarks $(PY) -c "import run; \
+	  run.run_benches([run.bench_sparse]); run.write_json(run.PR9_JSON)"
 
 # multi-device test leg: paged sharding + token-identity sweep on an
 # 8-way host mesh (the paged suite re-runs under the same mesh)

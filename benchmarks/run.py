@@ -49,6 +49,10 @@ PR7_JSON = Path(os.environ.get(
 PR8_JSON = Path(os.environ.get(
     "REPRO_BENCH_PR8_JSON",
     Path(__file__).resolve().parent.parent / "BENCH_pr8.json"))
+# PR 9 rows (structured N:M weight sparsity, §14) likewise
+PR9_JSON = Path(os.environ.get(
+    "REPRO_BENCH_PR9_JSON",
+    Path(__file__).resolve().parent.parent / "BENCH_pr9.json"))
 _ROWS = []
 
 
@@ -697,9 +701,153 @@ def bench_shard() -> None:
          f"handoff_MB_per_req={dm['handoff_bytes_per_req'] / 1e6:.0f}")
 
 
+def bench_sparse() -> None:
+    """PR 9 rows (BENCH_pr9.json): structured N:M weight sparsity
+    through the WS-OCS kernel family (DESIGN.md §14).
+
+    * ``sparse_matmul_speedup`` — op-level wall time of the jitted
+      row-skip lowering (gather kept activation columns, contract only
+      the Nc kept rows) vs the jitted dense-masked baseline GEMM at the
+      same logical shape. This is the genuinely-less-work arm: 2:4 halves
+      the contraction, target ≥1.5×.
+    * ``sparse_panel_bytes`` — compressed weight-panel DMA bytes per
+      K-tile vs dense for the bitmask ('col') format the sparse RCW
+      kernel double-buffers (w4 2:4 = 3 bits/elem → 25 % fewer bytes).
+    * ``sparse_bitexact_int`` — the interpret-mode sparse fused kernel in
+      int-accumulation mode vs the jitted dense-mask int reference, bit
+      compared (the §14 serving-equivalence contract).
+    * ``sparse_sched_*`` — a 2:4-sparse checkpoint vs its dense-masked
+      equivalent through the paged Scheduler: token identity + wall
+      tokens/sec (CPU ref lowering, indicative).
+    * ``sparse_model_*`` — analytic RCW-CIM rows from
+      ``pm.sparsity_report``: weight/DRAM/update reductions and the
+      sparsity-gated decode/prefill speedups next to Fig-8/Fig-9."""
+    from repro.core.quant import SparsityConfig, nm_prune_mask, sparsify_weight
+    from repro.kernels import sparse_matmul as sm
+
+    # ---- op-level: row-skip vs dense-masked GEMM ---------------------
+    M, N, K = 128, 2048, 2048
+    sp = SparsityConfig(2, 4, "row")
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal((N, K)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((M, N)), jnp.float32)
+    qc = QuantConfig("w4a8", 128)
+    sw = sparsify_weight(w, qc, sp)
+    wd = w * nm_prune_mask(w, sp).astype(w.dtype)
+    qw = quantize_weight(wd, qc)
+
+    dense_fn = jax.jit(
+        lambda a, d, s: ref.ws_ocs_matmul_ref(a, d, s, bits=4))
+    skip_fn = jax.jit(
+        lambda a, d, s, i: ref.sparse_skip_matmul_ref(a, d, s, i,
+                                                      n=2, m=4, bits=4))
+    us_d, out_d = _timeit(lambda: dense_fn(x, qw.data, qw.scale), n=10)
+    us_s, out_s = _timeit(lambda: skip_fn(x, sw.data, sw.scale, sw.idx),
+                          n=10)
+    # f32 round-off only: the skip arm sums the same nonzero products in
+    # a different order over the 2048-deep contraction
+    np.testing.assert_allclose(np.asarray(out_d), np.asarray(out_s),
+                               rtol=1e-4, atol=1e-3)
+    speedup = us_d / us_s
+    _row("sparse_matmul_speedup", us_s,
+         f"dense_us={us_d:.1f};sparse_us={us_s:.1f};"
+         f"speedup={speedup:.2f}x;target=1.5x;met={speedup >= 1.5};"
+         f"shape=({M},{N},{K});spec=2:4:row")
+
+    # ---- compressed panel DMA bytes (col/bitmask format) -------------
+    bk = 128
+    dense_bytes = (N // 2) * bk                     # int4 nibble panel
+    sparse_bytes = (N // 2 // 2) * bk + (N // 8) * bk   # vals + bitmask
+    _row("sparse_panel_bytes", 0.0,
+         f"dense_bytes={dense_bytes};sparse_bytes={sparse_bytes};"
+         f"reduction={1 - sparse_bytes / dense_bytes:.3f};spec=2:4;"
+         f"bits_per_elem=3.0")
+
+    # ---- bit-exactness of the kernel int-accumulation path -----------
+    Mi, Ni, Ki = 8, 32, 16
+    spc = SparsityConfig(2, 4, "col")
+    wi = jnp.asarray(rng.standard_normal((Ni, Ki)), jnp.float32)
+    xi = jnp.asarray(rng.integers(-8, 8, size=(Mi, Ni)), jnp.int8)
+    xsc = jnp.asarray(rng.uniform(0.5, 2.0, size=(Mi, 1)), jnp.float32)
+    qci = QuantConfig("w4a8", 16)
+    swi = sparsify_weight(wi, qci, spc)
+    wdi = wi * nm_prune_mask(wi, spc).astype(wi.dtype)
+    qwi = quantize_weight(wdi, qci)
+
+    def kern():
+        return sm.sparse_fused_matmul(
+            xi, swi.data, swi.scale, swi.idx, n=2, m=4, bits=4,
+            x_scale=xsc, accum="int32", bm=Mi, bk=Ki, interpret=True)
+    # the reference is the dense-mask reconstruction through the SAME
+    # int-accumulation chain, jit-compiled (see int_group_matmul_ref's
+    # docstring: bit-equality holds jit-vs-jit — both sides then share
+    # one FMA contraction of the scale-combine)
+    ref_fn = jax.jit(lambda a, d, s, i, xs: ref.sparse_fused_matmul_ref(
+        a, d, s, i, n=2, m=4, bits=4, x_scale=xs, accum="int32"))
+    us_k, out_k = _timeit(kern)
+    out_r = ref_fn(xi, swi.data, swi.scale, swi.idx, xsc)
+    exact = bool((np.asarray(out_k) == np.asarray(out_r)).all())
+    _row("sparse_bitexact_int", us_k,
+         f"bit_exact={exact};spec=2:4;accum=int32;"
+         f"shape=({Mi},{Ni},{Ki})")
+
+    # ---- scheduler-level: sparse vs dense-masked serving -------------
+    from repro.configs import get_config
+    from repro.models import api
+    from repro.serve.batching import Request
+    from repro.serve.engine import prune_params, quantize_params
+    from repro.serve.paged import Scheduler
+
+    cfg = get_config("llama2-7b", smoke=True).replace(
+        dtype=jnp.float32, quant_mode="w4a8", num_layers=2, d_model=64,
+        num_heads=2, num_kv_heads=2, d_ff=128, vocab_size=256)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    scfg = cfg.replace(sparsity="2:4")
+    sp_params = quantize_params(params, scfg)
+    dm_params = quantize_params(prune_params(params, scfg), cfg)
+    rngp = np.random.default_rng(1)
+    reqs = [rngp.integers(1, cfg.vocab_size, size=ln).tolist()
+            for ln in (8, 24, 16, 40, 8, 32)]
+    new, max_len, bs = 6, 128, 16
+
+    def run_sched(c, p):
+        sch = Scheduler(c, p, slots=4, max_len=max_len, block_size=bs,
+                        chunk=16)
+        for i, pr in enumerate(reqs):
+            sch.submit(Request(rid=i, prompt=pr, max_new=new))
+        return sch.run()
+
+    t0 = time.perf_counter()
+    out_dm = run_sched(cfg, dm_params)
+    t_dm = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    out_sp = run_sched(scfg, sp_params)
+    t_sp = time.perf_counter() - t0
+    ident = out_sp == out_dm
+    toks = len(reqs) * new
+    _row("sparse_sched_dense_masked", t_dm * 1e6,
+         f"tok_s={toks / t_dm:.1f}")
+    _row("sparse_sched_sparse", t_sp * 1e6,
+         f"tok_s={toks / t_sp:.1f};tokens_identical={ident};spec=2:4")
+    assert ident, "2:4-sparse scheduler output diverged from dense-masked"
+
+    # ---- analytic RCW-CIM projections --------------------------------
+    for gran in ("col", "row"):
+        r = pm.sparsity_report(2, 4, gran)
+        _row(f"sparse_model_{gran}", 0.0,
+             f"weight_reduction={r['weight_reduction']:.3f};"
+             f"dram_reduction={r['dram_reduction']:.3f};"
+             f"update_reduction={r['update_reduction']:.3f};"
+             f"decode_speedup={r['decode_speedup']:.2f}x;"
+             f"prefill_speedup={r['prefill_speedup']:.2f}x;"
+             f"sparse_tok_s={r['sparse_tokens_per_s']:.1f};"
+             f"dense_tok_s={r['dense_tokens_per_s']:.1f}")
+
+
 ALL_BENCHES = [bench_table1, bench_fig8, bench_fig9, bench_table2,
                bench_kernels, bench_fused, bench_decode_dispatch,
-               bench_paged, bench_prefill, bench_spec, bench_shard]
+               bench_paged, bench_prefill, bench_spec, bench_shard,
+               bench_sparse]
 
 
 def run_benches(benches, keep_going: bool = False):
@@ -727,7 +875,8 @@ def write_json(target=None) -> Path:
     for prefix, tag, default in (("paged_", "pr5", PR5_JSON),
                                  ("prefill_", "pr6", PR6_JSON),
                                  ("spec_", "pr7", PR7_JSON),
-                                 ("shard_", "pr8", PR8_JSON)):
+                                 ("shard_", "pr8", PR8_JSON),
+                                 ("sparse_", "pr9", PR9_JSON)):
         rows = [r for r in _ROWS if r["name"].startswith(prefix)]
         if not rows or target == default:   # already the canonical artifact
             continue

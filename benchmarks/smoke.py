@@ -7,9 +7,10 @@ Usage: PYTHONPATH=src python benchmarks/smoke.py [--fast]
           rows + dispatch-count metric, the PR 5 paged-vs-dense serving
           rows (BENCH_pr5.fast.json), the PR 6 chunked-prefill
           kernelization rows (BENCH_pr6.fast.json), the PR 7
-          speculative-decoding rows (BENCH_pr7.fast.json), and the PR 8
+          speculative-decoding rows (BENCH_pr7.fast.json), the PR 8
           multi-device sharded-serving rows (BENCH_pr8.fast.json — the
-          8-device arms run in a subprocess, see bench_shard)
+          8-device arms run in a subprocess, see bench_shard), and the
+          PR 9 structured-sparsity rows (BENCH_pr9.fast.json)
 """
 from __future__ import annotations
 
@@ -23,7 +24,7 @@ def main(argv) -> int:
     fast = "--fast" in argv
     benches = [run.bench_fused, run.bench_decode_dispatch,
                run.bench_paged, run.bench_prefill, run.bench_spec,
-               run.bench_shard] if fast \
+               run.bench_shard, run.bench_sparse] if fast \
         else run.ALL_BENCHES
     # fast mode must not clobber the full-row artifact (unless the
     # caller redirected the output explicitly)

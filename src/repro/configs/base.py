@@ -65,6 +65,13 @@ class ModelConfig:
                                       # kernel dispatch per linear
     dataflow: str = "ws_ocs"          # kernel/scheduler dataflow selection
     rcw: bool = True                  # weight-stream overlap on/off
+    sparsity: str = ""                # structured N:M weight sparsity
+                                      # (§14): "" dense, "2:4" per-column,
+                                      # "n:m:row" flexible per-row N-of-M;
+                                      # consumed by quantize_params —
+                                      # eligible weights are stored
+                                      # compressed and routed through the
+                                      # sparse WS-OCS kernels
     # --- numerics / compile ---
     dtype: Any = jnp.bfloat16
     scan_layers: bool = True

@@ -86,16 +86,25 @@ def group_scales(x: jax.Array, group_size: int, axis: int = 0) -> jax.Array:
 
 def pack_int4(q: jax.Array, axis: int = 0) -> jax.Array:
     """Pack int4 values (stored as int8 in [-8,7]) two-per-byte along
-    ``axis``. Even indices go to the low nibble."""
-    assert q.shape[axis] % 2 == 0
+    ``axis``. Even indices go to the low nibble. Odd lengths are
+    zero-padded to the next byte; pass ``n=`` to :func:`unpack_int4` to
+    trim the pad on the way back."""
+    if q.shape[axis] % 2 != 0:
+        pad = [(0, 0)] * q.ndim
+        pad[axis] = (0, 1)
+        q = jnp.pad(q, pad)
     u = (q.astype(jnp.int32) & 0xF).astype(jnp.uint8)
     lo = jax.lax.slice_in_dim(u, 0, u.shape[axis], stride=2, axis=axis)
     hi = jax.lax.slice_in_dim(u, 1, u.shape[axis], stride=2, axis=axis)
     return (lo | (hi << 4)).astype(jnp.uint8)
 
 
-def unpack_int4(p: jax.Array, axis: int = 0) -> jax.Array:
-    """Inverse of :func:`pack_int4` → int8 values in [-8, 7]."""
+def unpack_int4(p: jax.Array, axis: int = 0,
+                n: Optional[int] = None) -> jax.Array:
+    """Inverse of :func:`pack_int4` → int8 values in [-8, 7].
+
+    ``n`` trims the trailing zero-pad byte nibble that ``pack_int4``
+    adds for odd lengths (defaults to the full 2×packed length)."""
     lo = (p & 0xF).astype(jnp.int8)
     hi = ((p >> 4) & 0xF).astype(jnp.int8)
     # sign-extend 4-bit two's complement
@@ -104,7 +113,10 @@ def unpack_int4(p: jax.Array, axis: int = 0) -> jax.Array:
     stacked = jnp.stack([lo, hi], axis=axis + 1)  # (..., n/2, 2, ...)
     shape = list(p.shape)
     shape[axis] = shape[axis] * 2
-    return stacked.reshape(shape)
+    out = stacked.reshape(shape)
+    if n is not None and n != shape[axis]:
+        out = jax.lax.slice_in_dim(out, 0, n, axis=axis)
+    return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,8 +134,8 @@ class QuantizedWeight:
     shape: tuple  # logical (N, K)
 
     def dequantize(self) -> jax.Array:
-        q = unpack_int4(self.data, axis=0) if self.bits == 4 else self.data
         n, k = self.shape
+        q = unpack_int4(self.data, axis=0, n=n) if self.bits == 4 else self.data
         g = self.scale.shape[0]
         sf = jnp.repeat(self.scale, n // g, axis=0)
         return q.astype(jnp.float32) * sf
@@ -145,3 +157,223 @@ def quantize_weight(w: jax.Array, cfg: QuantConfig) -> QuantizedWeight:
         q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), INT8_MIN, INT8_MAX)
         return QuantizedWeight(q.astype(jnp.int8), scale.reshape(1, k), 8, n, (n, k))
     raise ValueError(f"no quantized storage for {cfg.mode}")
+
+
+# ---------------------------------------------------------------------------
+# Structured N:M weight sparsity (DESIGN.md §14)
+#
+# Two granularities over the contraction dim (N), both magnitude-pruned:
+#
+# * "col" — classic per-output-column N:M (2:4 default): each column keeps
+#   the n largest of every m consecutive rows independently. Metadata is a
+#   packed BITMASK, uint8 (N//8, K): 1 bit per original position, so a w4
+#   2:4 weight streams 0.5·4 + 1 = 3 bits/element instead of 4 (25% fewer
+#   panel DMA bytes; the sparse kernels expand it back to a dense tile
+#   in VMEM with a rank/cumsum select — no gather).
+# * "row" — the flexible per-row N-of-M variant: whole contraction rows
+#   are kept/dropped together (ranked by column-aggregated magnitude),
+#   shared across all output columns. Metadata is the kept-row index
+#   vector, int32 (Nc,), scalar-prefetched by the kernels; the MACs for
+#   dropped rows are genuinely skipped (x[:, kept] @ Wc).
+#
+# Pruning happens BEFORE quantization on the dense float weight, and the
+# scales are computed on the masked dense weight — so a sparse checkpoint
+# carries bit-identical (data, scale) to its dense-masked equivalent and
+# serves token-identically through the default dense-mask lowering.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsityConfig:
+    """Structured N:M sparsity spec: keep ``n`` of every ``m`` rows.
+
+    granularity: "col" (per-output-column N:M) or "row" (whole
+    contraction rows, flexible N-of-M)."""
+
+    n: int = 2
+    m: int = 4
+    granularity: str = "col"
+
+    @property
+    def keep_frac(self) -> float:
+        return self.n / self.m
+
+    @property
+    def key(self) -> str:
+        """Pytree leaf name carrying the metadata tensor. n/m are encoded
+        in the KEY (static under vmap/scan) and granularity is recovered
+        from the leaf's ndim (1 → row indices, 2 → column bitmask)."""
+        return f"sp{self.n}of{self.m}"
+
+
+def parse_sparsity(spec: str) -> Optional[SparsityConfig]:
+    """Parse ``cfg.sparsity``: "" → None, "2:4" → col, "2:4:row" → row."""
+    if not spec:
+        return None
+    parts = spec.split(":")
+    if len(parts) not in (2, 3):
+        raise ValueError(f"bad sparsity spec {spec!r} (want 'n:m[:row]')")
+    n, m = int(parts[0]), int(parts[1])
+    gran = parts[2] if len(parts) == 3 else "col"
+    if gran not in ("col", "row"):
+        raise ValueError(f"bad sparsity granularity {gran!r} in {spec!r}")
+    if not 0 < n < m:
+        raise ValueError(f"bad sparsity ratio {n}:{m} in {spec!r}")
+    return SparsityConfig(n, m, gran)
+
+
+def nm_prune_mask(w: jax.Array, sp: SparsityConfig) -> jax.Array:
+    """Boolean keep-mask (N, K) with exactly ``n`` kept per ``m``-group.
+
+    col: per-column |w| ranking inside each m-group. row: rows ranked by
+    column-aggregated |w| (sum over K), mask constant across columns.
+    Ties break toward the lower row index (stable argsort)."""
+    n_rows, k = w.shape
+    assert n_rows % sp.m == 0, (n_rows, sp.m)
+    score = jnp.abs(w.astype(jnp.float32))
+    if sp.granularity == "row":
+        score = jnp.sum(score, axis=1, keepdims=True)  # (N, 1)
+    g2 = n_rows // sp.m
+    sg = score.reshape(g2, sp.m, -1)
+    # rank[j] = how many entries beat entry j (descending, stable)
+    order = jnp.argsort(-sg, axis=1, stable=True)
+    rank = jnp.argsort(order, axis=1, stable=True)
+    mask = (rank < sp.n).reshape(n_rows, score.shape[1])
+    return jnp.broadcast_to(mask, (n_rows, k))
+
+
+def pack_bitmask(mask: jax.Array) -> jax.Array:
+    """Pack a boolean (N, K) mask to uint8 (N//8, K); bit i of byte b is
+    row 8b+i (little-endian within the byte)."""
+    n_rows, k = mask.shape
+    assert n_rows % 8 == 0, n_rows
+    m8 = mask.astype(jnp.uint8).reshape(n_rows // 8, 8, k)
+    shifts = jnp.arange(8, dtype=jnp.uint8).reshape(1, 8, 1)
+    return jnp.sum(m8 << shifts, axis=1).astype(jnp.uint8)
+
+
+def unpack_bitmask(packed: jax.Array, n_rows: int) -> jax.Array:
+    """Inverse of :func:`pack_bitmask` → bool (n_rows, K)."""
+    n8, k = packed.shape
+    assert n8 * 8 == n_rows, (n8, n_rows)
+    shifts = jnp.arange(8, dtype=jnp.uint8).reshape(1, 8, 1)
+    bits = (packed[:, None, :] >> shifts) & 1
+    return bits.reshape(n_rows, k).astype(bool)
+
+
+def mask_rank(mask: jax.Array, m: int) -> jax.Array:
+    """0-based rank of each kept position among the kept entries of its
+    m-group (exclusive cumsum; value for dropped positions is unused)."""
+    n_rows, k = mask.shape
+    mg = mask.astype(jnp.int32).reshape(n_rows // m, m, k)
+    return (jnp.cumsum(mg, axis=1) - mg).reshape(n_rows, k)
+
+
+def compact_nm(q: jax.Array, mask: jax.Array, sp: SparsityConfig):
+    """Compress a dense (N, K) value tensor to its (Nc, K) nonzeros plus
+    the metadata tensor (col → packed bitmask, row → kept indices).
+
+    Kept values stay in ascending row order, so the round-trip through
+    :func:`expand_nm` is exact."""
+    n_rows, k = q.shape
+    nc = n_rows * sp.n // sp.m
+    g2 = n_rows // sp.m
+    if sp.granularity == "row":
+        keep_row = mask[:, 0]
+        # kept row indices, ascending (exactly nc of them by construction)
+        kept = jnp.sort(jnp.where(keep_row, jnp.arange(n_rows), n_rows))[:nc]
+        return jnp.take(q, kept, axis=0), kept.astype(jnp.int32)
+    # col: within each m-group, kept offsets sort ahead of dropped ones
+    off = jnp.arange(sp.m).reshape(1, sp.m, 1)
+    keyed = jnp.where(mask.reshape(g2, sp.m, k), off, sp.m + off)
+    pos = jnp.sort(keyed, axis=1)[:, : sp.n, :] % sp.m
+    vals = jnp.take_along_axis(q.reshape(g2, sp.m, k), pos, axis=1)
+    return vals.reshape(nc, k), pack_bitmask(mask)
+
+
+def expand_nm(vals: jax.Array, idx: jax.Array, sp: SparsityConfig,
+              n_rows: int) -> jax.Array:
+    """Exact inverse of :func:`compact_nm`: (Nc, K) values + metadata →
+    dense (N, K) with zeros in the pruned slots."""
+    nc, k = vals.shape
+    if sp.granularity == "row":
+        return jnp.zeros((n_rows, k), vals.dtype).at[idx].set(vals)
+    mask = unpack_bitmask(idx, n_rows)
+    rank = mask_rank(mask, sp.m)
+    g2 = n_rows // sp.m
+    vg = vals.reshape(g2, sp.n, k)
+    gathered = jnp.take_along_axis(
+        vg, jnp.minimum(rank, sp.n - 1).reshape(g2, sp.m, k), axis=1)
+    return (gathered.reshape(n_rows, k)
+            * mask.astype(vals.dtype)).astype(vals.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseQuantizedWeight:
+    """Compressed N:M-sparse quantized (N, K) weight for the sparse
+    WS-OCS kernels.
+
+    ``data``: packed compressed nonzeros — uint8 (Nc//2, K) for w4,
+    int8 (Nc, K) for w8 (same pack format as the dense path).
+    ``scale``: f32 (G, K), computed on the MASKED DENSE weight — bit-
+    identical to the dense-masked equivalent checkpoint's scales.
+    ``idx``: col → uint8 packed bitmask (N//8, K); row → int32 (Nc,)
+    kept-row indices (ascending)."""
+
+    data: jax.Array
+    scale: jax.Array
+    idx: jax.Array
+    bits: int
+    group_size: int
+    sp: SparsityConfig
+    shape: tuple  # logical dense (N, K)
+
+    def expand_q(self) -> jax.Array:
+        """Dense int8 (N, K) codes with zeros in pruned slots — exactly
+        the codes the dense-masked equivalent checkpoint stores."""
+        n_rows, _ = self.shape
+        nc = n_rows * self.sp.n // self.sp.m
+        vals = (unpack_int4(self.data, axis=0, n=nc)
+                if self.bits == 4 else self.data)
+        return expand_nm(vals, self.idx, self.sp, n_rows)
+
+    def dequantize(self) -> jax.Array:
+        n_rows, _ = self.shape
+        sf = jnp.repeat(self.scale, n_rows // self.scale.shape[0], axis=0)
+        return self.expand_q().astype(jnp.float32) * sf
+
+
+def sparse_ok(n_rows: int, sp: SparsityConfig) -> bool:
+    """Can a (n_rows, K) weight be stored N:M-compressed? Needs whole
+    m-groups, byte-aligned bitmask rows (col), and an even nonzero count
+    for nibble packing."""
+    if n_rows % sp.m != 0:
+        return False
+    if sp.granularity == "col" and n_rows % 8 != 0:
+        return False
+    return (n_rows * sp.n // sp.m) % 2 == 0
+
+
+def sparsify_weight(w: jax.Array, cfg: QuantConfig,
+                    sp: SparsityConfig) -> SparseQuantizedWeight:
+    """Magnitude-prune ``w`` to N:M structure, then quantize the masked
+    dense weight per ``cfg`` (prune-then-quantize: scales — and therefore
+    every dequantized value — match the dense-masked checkpoint exactly),
+    then compact storage to the nonzeros + metadata."""
+    n_rows, k = w.shape
+    assert sparse_ok(n_rows, sp), (w.shape, sp)
+    mask = nm_prune_mask(w, sp)
+    qw = quantize_weight(w.astype(jnp.float32) * mask, cfg)
+    gs = qw.group_size
+    # uniform compressed rows per scale group keeps the (G, K) scale
+    # layout valid in compressed space; fall back to per-channel if not
+    if gs % sp.m != 0:
+        qw = quantize_weight(w.astype(jnp.float32) * mask,
+                             dataclasses.replace(cfg, group_size=None))
+        gs = qw.group_size
+    q_dense = (unpack_int4(qw.data, axis=0, n=n_rows)
+               if qw.bits == 4 else qw.data)
+    vals, idx = compact_nm(q_dense, mask, sp)
+    data = pack_int4(vals, axis=0) if qw.bits == 4 else vals
+    return SparseQuantizedWeight(data, qw.scale, idx, qw.bits, gs, sp,
+                                 (n_rows, k))

@@ -71,6 +71,72 @@ def _tile(dim: int, block: int) -> int:
     return b if dim % b == 0 else dim
 
 
+def _sparse_skip() -> bool:
+    """``REPRO_OPT_SPARSESKIP=1``: off-TPU, lower row-granular N:M
+    matmuls to the compressed-skip reference (~m/n fewer MACs; matches
+    the dense-mask path to fp32 round-off). Default OFF so a sparse
+    checkpoint serves BIT-identically to its dense-masked equivalent
+    (the Scheduler token-identity tests rely on this)."""
+    from repro.parallel.flags import opt
+    return opt("SPARSESKIP", default=False)
+
+
+def sparse_ws_ocs_matmul(x, w_data, w_scale, w_idx, *, n, m, bits=4,
+                         x_scale=None, accum="f32", bm=128, bk=128,
+                         rcw=True):
+    """N:M-sparse panel-stationary matmul (DESIGN.md §14): compressed
+    values + bitmask (col, w_idx ndim 2) or scalar-prefetched kept-row
+    indices (row, ndim 1). On TPU the sparse kernels stream the
+    compressed (Nc × bk) panel; off-TPU the default lowering expands to
+    the dense-masked equivalent (bit-identical serving), and
+    ``REPRO_OPT_SPARSESKIP=1`` switches row-granular weights to the
+    compressed-skip contraction."""
+    if _use_pallas():
+        from repro.kernels import sparse_matmul as _sm
+        M, K = x.shape[0], w_data.shape[1]
+        bm, bk = _tile(M, bm), _tile(K, bk)
+        if rcw and x_scale is None and accum == "f32":
+            return _sm.sparse_rcw_matmul(x, w_data, w_scale, w_idx, n=n,
+                                         m=m, bits=bits, bm=bm, bk=bk,
+                                         rcw=True, interpret=_interpret())
+        return _sm.sparse_ws_ocs_matmul(x, w_data, w_scale, w_idx, n=n,
+                                        m=m, bits=bits, x_scale=x_scale,
+                                        accum=accum, bm=bm, bk=bk,
+                                        interpret=_interpret())
+    if w_idx.ndim == 1 and _sparse_skip():
+        return ref.sparse_skip_matmul_ref(x, w_data, w_scale, w_idx, n=n,
+                                          m=m, bits=bits, x_scale=x_scale,
+                                          accum=accum)
+    return ref.sparse_ws_ocs_matmul_ref(x, w_data, w_scale, w_idx, n=n,
+                                        m=m, bits=bits, x_scale=x_scale,
+                                        accum=accum)
+
+
+def sparse_fused_matmul(x, w_data, w_scale, w_idx, *, n, m, bits=4,
+                        gamma=None, norm_group=128, norm_eps=1e-6,
+                        x_scale=None, act="none", w2_data=None,
+                        w2_scale=None, w2_idx=None, bias=None,
+                        residual=None, out_scale=None, accum="f32",
+                        bm=128, bk=128):
+    """Fused prologue/epilogue WS-OCS matmul on N:M-compressed weights
+    (DESIGN.md §14): same stage chain as ``fused_matmul``. Off-TPU the
+    lowering is always the dense-mask reconstruction reference — bit-
+    identical to the dense-masked checkpoint, so the fused decode path
+    stays token-identical regardless of REPRO_OPT_SPARSESKIP."""
+    kw = dict(n=n, m=m, bits=bits, gamma=gamma, norm_group=norm_group,
+              norm_eps=norm_eps, x_scale=x_scale, act=act,
+              w2_data=w2_data, w2_scale=w2_scale, w2_idx=w2_idx,
+              bias=bias, residual=residual, out_scale=out_scale,
+              accum=accum)
+    if _use_pallas():
+        from repro.kernels import sparse_matmul as _sm
+        M, K = x.shape[0], w_data.shape[1]
+        return _sm.sparse_fused_matmul(x, w_data, w_scale, w_idx,
+                                       bm=_tile(M, bm), bk=_tile(K, bk),
+                                       interpret=_interpret(), **kw)
+    return ref.sparse_fused_matmul_ref(x, w_data, w_scale, w_idx, **kw)
+
+
 def fused_matmul(x, w_data, w_scale, *, bits=4, gamma=None, norm_group=128,
                  norm_eps=1e-6, x_scale=None, act="none", w2_data=None,
                  w2_scale=None, bias=None, residual=None, out_scale=None,

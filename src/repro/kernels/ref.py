@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import fusion
-from repro.core.quant import unpack_int4
+from repro.core.quant import SparsityConfig, expand_nm, unpack_int4
 
 
 def dequant_weight_ref(w_data: jax.Array, w_scale: jax.Array, bits: int,
@@ -72,6 +72,169 @@ def fused_matmul_ref(x: jax.Array, w_data: jax.Array, w_scale: jax.Array, *,
     if w2_data is not None:
         acc2 = jnp.dot(xf, dequant_weight_ref(w2_data, w2_scale, bits),
                        preferred_element_type=jnp.float32)
+        if x_scale is not None:
+            acc2 = acc2 * x_scale.astype(jnp.float32)
+        acted = acted * acc2
+    if bias is not None:
+        acted = acted + bias.astype(jnp.float32)
+    if residual is not None:
+        acted = acted + residual.astype(jnp.float32)
+    if out_scale is not None:
+        q = jnp.round(acted / out_scale.astype(jnp.float32))
+        return jnp.clip(q, -128, 127).astype(jnp.int8)
+    return acted
+
+
+# --- structured N:M sparsity references (DESIGN.md §14) -------------------
+#
+# Granularity is recovered from the metadata tensor's rank: ndim == 2 →
+# per-output-column bitmask (uint8 (N//8, K)); ndim == 1 → kept-row
+# indices (int32 (Nc,), the flexible per-row N-of-M variant).
+
+
+def _sparsity_cfg(w_idx: jax.Array, n: int, m: int) -> SparsityConfig:
+    return SparsityConfig(n, m, "row" if w_idx.ndim == 1 else "col")
+
+
+def int_group_matmul_ref(xq: jax.Array, q: jax.Array,
+                         w_scale: jax.Array) -> jax.Array:
+    """Bit-deterministic int-accumulation GEMM: one exact int32 dot per
+    scale group, combined in a fixed group-ascending f32 chain. The
+    sparse kernels run this same helper per output tile, so kernel and
+    reference agree BIT-exactly for any tiling (integer dots are exactly
+    associative; the f32 scale-combine order is pinned here). Compare
+    jit-compiled programs on both sides: the CPU backend contracts the
+    mul+add pair to an FMA at LLVM emission (below HLO, so even
+    optimization_barrier can't split it), which makes eager evaluation
+    differ from ANY compiled run by one rounding — but two compiled
+    programs sharing this helper contract identically."""
+    g = w_scale.shape[0]
+    gs = q.shape[0] // g
+    out = jnp.zeros((xq.shape[0], q.shape[1]), jnp.float32)
+    for gi in range(g):
+        part = jax.lax.dot(
+            xq[:, gi * gs:(gi + 1) * gs].astype(jnp.int32),
+            q[gi * gs:(gi + 1) * gs].astype(jnp.int32),
+            preferred_element_type=jnp.int32)
+        out = out + part.astype(jnp.float32) * w_scale[gi][None, :]
+    return out
+
+
+def sparse_expand_q_ref(w_data: jax.Array, w_idx: jax.Array, *, n: int,
+                        m: int, bits: int, n_rows: int) -> jax.Array:
+    """Dense int8 (N, K) codes (zeros in pruned slots) from compressed
+    N:M storage — exact round-trip of ``quant.compact_nm``."""
+    sp = _sparsity_cfg(w_idx, n, m)
+    nc = n_rows * n // m
+    vals = unpack_int4(w_data, axis=0, n=nc) if bits == 4 else w_data
+    return expand_nm(vals, w_idx, sp, n_rows)
+
+
+def sparse_ws_ocs_matmul_ref(x: jax.Array, w_data: jax.Array,
+                             w_scale: jax.Array, w_idx: jax.Array, *,
+                             n: int, m: int, bits: int = 4,
+                             x_scale: Optional[jax.Array] = None,
+                             accum: str = "f32",
+                             out_dtype=jnp.float32) -> jax.Array:
+    """Dense-mask reconstruction reference: expand the compressed weight
+    back to its dense-masked equivalent and run the dense GEMM algebra.
+    ``accum="int32"`` uses the bit-deterministic int chain (x must be
+    int8); ``"f32"`` matches the dense kernels to fp32 round-off."""
+    n_rows = x.shape[-1]
+    q = sparse_expand_q_ref(w_data, w_idx, n=n, m=m, bits=bits,
+                            n_rows=n_rows)
+    if accum == "int32":
+        out = int_group_matmul_ref(x, q, w_scale)
+    else:
+        g = w_scale.shape[0]
+        wf = q.astype(jnp.float32) * jnp.repeat(w_scale, n_rows // g, axis=0)
+        out = jnp.dot(x.astype(jnp.float32), wf,
+                      preferred_element_type=jnp.float32)
+    if x_scale is not None:
+        out = out * x_scale.astype(jnp.float32)
+    return out.astype(out_dtype)
+
+
+def sparse_skip_matmul_ref(x: jax.Array, w_data: jax.Array,
+                           w_scale: jax.Array, w_idx: jax.Array, *,
+                           n: int, m: int, bits: int = 4,
+                           x_scale: Optional[jax.Array] = None,
+                           accum: str = "f32",
+                           out_dtype=jnp.float32) -> jax.Array:
+    """Row-granular compressed-skip lowering: gather the kept activation
+    columns and contract only the Nc = N·n/m stored rows — ~m/n fewer
+    MACs than the dense-mask path. Bit-exact vs the dense-mask reference
+    in int-accumulation mode (dropped rows contribute exactly 0 to each
+    int32 group partial); fp32 round-off otherwise."""
+    assert w_idx.ndim == 1, "skip lowering needs row-granular sparsity"
+    nc = w_idx.shape[0]
+    vals = unpack_int4(w_data, axis=0, n=nc) if bits == 4 else w_data
+    xc = jnp.take(x, w_idx, axis=-1)
+    if accum == "int32":
+        out = int_group_matmul_ref(xc, vals, w_scale)
+    else:
+        g = w_scale.shape[0]
+        wf = vals.astype(jnp.float32) * jnp.repeat(w_scale, nc // g, axis=0)
+        out = jnp.dot(xc.astype(jnp.float32), wf,
+                      preferred_element_type=jnp.float32)
+    if x_scale is not None:
+        out = out * x_scale.astype(jnp.float32)
+    return out.astype(out_dtype)
+
+
+def sparse_fused_matmul_ref(x: jax.Array, w_data: jax.Array,
+                            w_scale: jax.Array, w_idx: jax.Array, *,
+                            n: int, m: int, bits: int = 4,
+                            gamma: Optional[jax.Array] = None,
+                            norm_group: int = 128, norm_eps: float = 1e-6,
+                            x_scale: Optional[jax.Array] = None,
+                            act: str = "none",
+                            w2_data: Optional[jax.Array] = None,
+                            w2_scale: Optional[jax.Array] = None,
+                            w2_idx: Optional[jax.Array] = None,
+                            bias: Optional[jax.Array] = None,
+                            residual: Optional[jax.Array] = None,
+                            out_scale: Optional[jax.Array] = None,
+                            accum: str = "f32") -> jax.Array:
+    """Fused-epilogue reference on compressed N:M weights: dense-mask
+    reconstruction feeding the same stage algebra as
+    :func:`fused_matmul_ref`. In ``accum="int32"`` mode (int8 x, no
+    norm prologue) every GEMM runs the bit-deterministic int chain and
+    all epilogue stages are elementwise f32, so the sparse kernel output
+    is bit-identical to this reference for any tiling."""
+    n_rows = x.shape[-1]
+
+    def _gemm(xin, data, scale, idx):
+        q = sparse_expand_q_ref(data, idx, n=n, m=m, bits=bits,
+                                n_rows=n_rows)
+        if accum == "int32":
+            return int_group_matmul_ref(xin, q, scale)
+        g = scale.shape[0]
+        wf = q.astype(jnp.float32) * jnp.repeat(scale, n_rows // g, axis=0)
+        return jnp.dot(xin.astype(jnp.float32), wf,
+                       preferred_element_type=jnp.float32)
+
+    if accum == "int32" and gamma is not None:
+        raise ValueError("int-accumulation mode has no norm prologue")
+    xf = x
+    if gamma is not None:
+        g = min(norm_group, x.shape[-1])
+        xf = fusion.group_rmsnorm(x.astype(jnp.float32),
+                                  gamma.astype(jnp.float32),
+                                  group_size=g, eps=norm_eps)
+    acc = _gemm(xf, w_data, w_scale, w_idx)
+    if x_scale is not None:
+        acc = acc * x_scale.astype(jnp.float32)
+    if act == "silu":
+        acted = jax.nn.silu(acc)
+    elif act == "gelu":
+        acted = jax.nn.gelu(acc)
+    elif act == "none":
+        acted = acc
+    else:
+        raise ValueError(f"unknown epilogue act {act!r}")
+    if w2_data is not None:
+        acc2 = _gemm(xf, w2_data, w2_scale, w2_idx)
         if x_scale is not None:
             acc2 = acc2 * x_scale.astype(jnp.float32)
         acted = acted * acc2

@@ -1,0 +1,460 @@
+"""Sparsity-aware WS-OCS matmul kernels: structured N:M compressed
+weights through the same VMEM-resident pipeline (DESIGN.md §14).
+
+The dense trio (``ws_ocs_matmul`` / ``fused_matmul`` / ``rcw_matmul``)
+streams (N × bk) weight panels; these variants stream the COMPRESSED
+(Nc × bk) panel, Nc = N·n/m, plus compact metadata — so every panel DMA
+moves ~n/m of the dense weight bytes (the paper's weight-update latency
+shrinks by the sparsity factor) and the zero groups never occupy VMEM.
+
+Two metadata forms, recovered from the tensor's rank:
+
+* **col** (ndim 2) — per-output-column N:M bitmask, uint8 (N//8, K).
+  The kernel expands the compressed values back to a dense (N, bk) tile
+  in VMEM with a rank/cumsum select over the m-groups (an n-step static
+  loop — no gather), then runs the dense MXU pipeline. Savings are in
+  HBM→VMEM panel traffic: 0.5·4 + 1 = 3 bits/element for w4 2:4.
+* **row** (ndim 1) — flexible per-row N-of-M: the kept-row index vector
+  int32 (Nc,) is SCALAR-PREFETCHED (same mechanism as the paged
+  attention block tables); the kernel gathers the kept activation
+  columns and contracts only Nc rows — the dropped rows' MACs are
+  genuinely skipped (~m/n fewer) on top of the panel-byte savings.
+
+``accum="int32"`` selects the bit-deterministic int-accumulation mode
+(int8 x, integer dot per scale group, fixed-order f32 scale chain —
+``ref.int_group_matmul_ref``): kernel output is bit-identical to the
+dense-mask reference for any tiling. ``"f32"`` matches to round-off.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from repro.kernels import pallas_compat as pltpu
+from repro.kernels import ref as _ref
+from repro.kernels.ws_ocs_matmul import _apply_act, check_tileable
+
+
+def _unpack_vals(v_blk: jax.Array, bits: int, nc: int) -> jax.Array:
+    """(Ncp, bk) packed/int8 compressed values → (Nc, bk) int8 codes."""
+    if bits != 4:
+        return v_blk
+    lo = (v_blk & 0xF).astype(jnp.int8)
+    hi = ((v_blk >> 4) & 0xF).astype(jnp.int8)
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    return jnp.stack([lo, hi], axis=1).reshape(nc, v_blk.shape[-1])
+
+
+def _expand_col_block(v_blk: jax.Array, b_blk: jax.Array, *, bits: int,
+                      n: int, m: int, n_rows: int) -> jax.Array:
+    """Compressed (Ncp, bk) values + (N//8, bk) bitmask → dense (N, bk)
+    int8 codes, zeros in pruned slots. Gather-free: the r-th kept value
+    of each m-group lands where the mask's exclusive cumsum equals r."""
+    bk = v_blk.shape[-1]
+    nc = n_rows * n // m
+    vq = _unpack_vals(v_blk, bits, nc)
+    shifts = jnp.arange(8, dtype=jnp.uint8).reshape(1, 8, 1)
+    msk = ((b_blk[:, None, :] >> shifts) & 1).astype(jnp.int32)
+    msk = msk.reshape(n_rows, bk)
+    g2 = n_rows // m
+    mg = msk.reshape(g2, m, bk)
+    rank = jnp.cumsum(mg, axis=1) - mg
+    vg = vq.reshape(g2, n, bk).astype(jnp.int32)
+    dense = jnp.zeros((g2, m, bk), jnp.int32)
+    for i in range(n):
+        dense = dense + jnp.where((rank == i) & (mg == 1),
+                                  vg[:, i][:, None, :], 0)
+    return dense.reshape(n_rows, bk).astype(jnp.int8)
+
+
+def _accumulate(x: jax.Array, q: jax.Array, s_blk: jax.Array,
+                accum: str) -> jax.Array:
+    """GEMM of (bm, R) x against (R, bk) int8 codes with (G, bk) scales:
+    int-chain (bit-deterministic) or plain f32."""
+    if accum == "int32":
+        return _ref.int_group_matmul_ref(x, q, s_blk)
+    sf = jnp.repeat(s_blk, q.shape[0] // s_blk.shape[0], axis=0)
+    return jnp.dot(x.astype(jnp.float32), q.astype(jnp.float32) * sf,
+                   preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# sparse ws_ocs_matmul
+# ---------------------------------------------------------------------------
+
+def _col_kernel(x_ref, w_ref, s_ref, b_ref, xs_ref, o_ref, *, bits, n, m,
+                n_rows, accum):
+    q = _expand_col_block(w_ref[...], b_ref[...], bits=bits, n=n, m=m,
+                          n_rows=n_rows)
+    acc = _accumulate(x_ref[...], q, s_ref[...], accum)
+    if xs_ref is not None:
+        acc = acc * xs_ref[...].astype(jnp.float32)
+    o_ref[...] = acc
+
+
+def _row_kernel(idx_ref, x_ref, w_ref, s_ref, xs_ref, o_ref, *, bits, nc,
+                accum):
+    xc = jnp.take(x_ref[...], idx_ref[...], axis=1)     # kept columns only
+    vq = _unpack_vals(w_ref[...], bits, nc)
+    acc = _accumulate(xc, vq, s_ref[...], accum)
+    if xs_ref is not None:
+        acc = acc * xs_ref[...].astype(jnp.float32)
+    o_ref[...] = acc
+
+
+def sparse_ws_ocs_matmul(x: jax.Array, w_data: jax.Array,
+                         w_scale: jax.Array, w_idx: jax.Array, *, n: int,
+                         m: int, bits: int = 4,
+                         x_scale: Optional[jax.Array] = None,
+                         accum: str = "f32", bm: int = 128, bk: int = 128,
+                         interpret: bool = False) -> jax.Array:
+    """N:M-sparse panel-stationary matmul. x (M, N); w_data compressed
+    (Nc//2, K) uint8 or (Nc, K) int8; w_scale (G, K); w_idx bitmask
+    (N//8, K) [col] or kept rows (Nc,) [row]. Output (M, K) f32."""
+    M, N = x.shape
+    K = w_data.shape[1]
+    Ncp = w_data.shape[0]
+    Nc = N * n // m
+    G = w_scale.shape[0]
+    req_bm, req_bk = bm, bk
+    bm = min(bm, M)
+    bk = min(bk, K)
+    check_tileable("sparse_ws_ocs_matmul", x.shape, w_data.shape,
+                   M, bm, req_bm, K, bk, req_bk)
+    grid = (K // bk, M // bm)
+    out_shape = jax.ShapeDtypeStruct((M, K), jnp.float32)
+    cp = pltpu.CompilerParams(dimension_semantics=("arbitrary", "arbitrary"))
+
+    if w_idx.ndim == 1:  # row granularity: scalar-prefetched kept rows
+        in_specs = [
+            pl.BlockSpec((bm, N), lambda k, m_, idx: (m_, 0)),
+            pl.BlockSpec((Ncp, bk), lambda k, m_, idx: (0, k)),
+            pl.BlockSpec((G, bk), lambda k, m_, idx: (0, k)),
+        ]
+        args = [x, w_data, w_scale]
+        kern = functools.partial(_row_kernel, bits=bits, nc=Nc, accum=accum)
+        if x_scale is not None:
+            in_specs.append(pl.BlockSpec((bm, 1),
+                                         lambda k, m_, idx: (m_, 0)))
+            args.append(x_scale)
+            wrapped = kern
+        else:
+            wrapped = lambda ir, xr, wr, sr, orf: \
+                kern(ir, xr, wr, sr, None, orf)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1, grid=grid, in_specs=in_specs,
+            out_specs=pl.BlockSpec((bm, bk), lambda k, m_, idx: (m_, k)))
+        return pl.pallas_call(wrapped, grid_spec=grid_spec,
+                              out_shape=out_shape, compiler_params=cp,
+                              interpret=interpret)(w_idx, *args)
+
+    in_specs = [
+        pl.BlockSpec((bm, N), lambda k, m_: (m_, 0)),
+        pl.BlockSpec((Ncp, bk), lambda k, m_: (0, k)),    # compressed panel
+        pl.BlockSpec((G, bk), lambda k, m_: (0, k)),
+        pl.BlockSpec((N // 8, bk), lambda k, m_: (0, k)),  # bitmask panel
+    ]
+    args = [x, w_data, w_scale, w_idx]
+    kern = functools.partial(_col_kernel, bits=bits, n=n, m=m, n_rows=N,
+                             accum=accum)
+    if x_scale is not None:
+        in_specs.append(pl.BlockSpec((bm, 1), lambda k, m_: (m_, 0)))
+        args.append(x_scale)
+        wrapped = kern
+    else:
+        wrapped = lambda xr, wr, sr, br, orf: \
+            kern(xr, wr, sr, br, None, orf)
+    return pl.pallas_call(wrapped, grid=grid, in_specs=in_specs,
+                          out_specs=pl.BlockSpec((bm, bk),
+                                                 lambda k, m_: (m_, k)),
+                          out_shape=out_shape, compiler_params=cp,
+                          interpret=interpret)(*args)
+
+
+# ---------------------------------------------------------------------------
+# sparse fused_matmul: compressed weights through the fused
+# prologue/epilogue pipeline (group-RMSNorm → GEMM → act/GLU → bias →
+# residual → int8 requant), same stage order as the dense kernel
+# ---------------------------------------------------------------------------
+
+def _sparse_fused_kernel(refs, *, bits, n, m, n_rows, act, has, norm_group,
+                         norm_eps, accum):
+    """refs: row granularity prepends the scalar-prefetched index
+    vector(s); then [x, w, s] (+bitmask for col) + optional
+    [gamma, x_scale, (w2, s2 [, mask2]), bias, residual, out_scale] +
+    [out]."""
+    nc = n_rows * n // m
+    it = iter(refs)
+    idx_ref = next(it) if has["row"] else None
+    idx2_ref = next(it) if has["row"] and has["glu"] else None
+    x_ref, w_ref, s_ref = next(it), next(it), next(it)
+    b1_ref = None if has["row"] else next(it)
+    g_ref = next(it) if has["gamma"] else None
+    xs_ref = next(it) if has["x_scale"] else None
+    w2_ref = next(it) if has["glu"] else None
+    s2_ref = next(it) if has["glu"] else None
+    b2m_ref = next(it) if has["glu"] and not has["row"] else None
+    b_ref = next(it) if has["bias"] else None
+    r_ref = next(it) if has["residual"] else None
+    q_ref = next(it) if has["requant"] else None
+    o_ref = next(it)
+
+    x = x_ref[...]
+    if g_ref is not None:
+        xf = x.astype(jnp.float32)
+        bm_, n_ = xf.shape
+        xg = xf.reshape(bm_, n_ // norm_group, norm_group)
+        partial_ms = jnp.mean(jnp.square(xg), axis=-1)
+        global_ms = jnp.mean(partial_ms, axis=-1, keepdims=True)
+        x = xf * jax.lax.rsqrt(global_ms + norm_eps) \
+            * g_ref[...].astype(jnp.float32)
+
+    def gemm(w_r, s_r, mask_r, i_r):
+        if has["row"]:
+            xc = jnp.take(x, i_r[...], axis=1)
+            return _accumulate(xc, _unpack_vals(w_r[...], bits, nc),
+                               s_r[...], accum)
+        q = _expand_col_block(w_r[...], mask_r[...], bits=bits, n=n, m=m,
+                              n_rows=n_rows)
+        return _accumulate(x, q, s_r[...], accum)
+
+    acc = gemm(w_ref, s_ref, b1_ref, idx_ref)
+    if xs_ref is not None:
+        acc = acc * xs_ref[...].astype(jnp.float32)
+
+    if w2_ref is not None:
+        acc2 = gemm(w2_ref, s2_ref, b2m_ref, idx2_ref)
+        if xs_ref is not None:
+            acc2 = acc2 * xs_ref[...].astype(jnp.float32)
+        acc = _apply_act(acc, act) * acc2
+    else:
+        acc = _apply_act(acc, act)
+
+    if b_ref is not None:
+        acc = acc + b_ref[...].astype(jnp.float32)
+    if r_ref is not None:
+        acc = acc + r_ref[...].astype(jnp.float32)
+    if q_ref is not None:
+        q = jnp.round(acc / q_ref[...].astype(jnp.float32))
+        o_ref[...] = jnp.clip(q, -128, 127).astype(jnp.int8)
+    else:
+        o_ref[...] = acc
+
+
+def sparse_fused_matmul(x: jax.Array, w_data: jax.Array,
+                        w_scale: jax.Array, w_idx: jax.Array, *, n: int,
+                        m: int, bits: int = 4,
+                        gamma: Optional[jax.Array] = None,
+                        norm_group: int = 128, norm_eps: float = 1e-6,
+                        x_scale: Optional[jax.Array] = None,
+                        act: str = "none",
+                        w2_data: Optional[jax.Array] = None,
+                        w2_scale: Optional[jax.Array] = None,
+                        w2_idx: Optional[jax.Array] = None,
+                        bias: Optional[jax.Array] = None,
+                        residual: Optional[jax.Array] = None,
+                        out_scale: Optional[jax.Array] = None,
+                        accum: str = "f32", bm: int = 128, bk: int = 128,
+                        interpret: bool = False) -> jax.Array:
+    """Fused-epilogue WS-OCS matmul on N:M-compressed weights. Same
+    optional stages as ``fused_matmul``; the GLU gate weight must carry
+    the same (n, m, granularity) sparsity as the main weight."""
+    M, N = x.shape
+    K = w_data.shape[1]
+    Ncp = w_data.shape[0]
+    G = w_scale.shape[0]
+    req_bm, req_bk = bm, bk
+    bm = min(bm, M)
+    bk = min(bk, K)
+    check_tileable("sparse_fused_matmul", x.shape, w_data.shape,
+                   M, bm, req_bm, K, bk, req_bk)
+    if gamma is not None:
+        norm_group = min(norm_group, N)
+        assert N % norm_group == 0, (N, norm_group)
+        if accum == "int32":
+            raise ValueError("int-accumulation mode has no norm prologue")
+    row = w_idx.ndim == 1
+    if w2_data is not None:
+        assert w2_data.shape == w_data.shape, (w2_data.shape, w_data.shape)
+        assert w2_scale is not None and w2_idx is not None
+        assert w2_idx.ndim == w_idx.ndim, (w2_idx.shape, w_idx.shape)
+
+    has = {"row": row, "gamma": gamma is not None,
+           "x_scale": x_scale is not None, "glu": w2_data is not None,
+           "bias": bias is not None, "residual": residual is not None,
+           "requant": out_scale is not None}
+
+    def spec(shape, imap):
+        # row granularity index maps take the trailing scalar-ref args
+        if row:
+            nsc = 2 if has["glu"] else 1
+            return pl.BlockSpec(shape, lambda k, m_, *sc: imap(k, m_))
+        return pl.BlockSpec(shape, imap)
+
+    in_specs = [
+        spec((bm, N), lambda k, m_: (m_, 0)),
+        spec((Ncp, bk), lambda k, m_: (0, k)),            # compressed panel
+        spec((G, bk), lambda k, m_: (0, k)),
+    ]
+    args = [x, w_data, w_scale]
+    if not row:
+        in_specs.append(spec((N // 8, bk), lambda k, m_: (0, k)))
+        args.append(w_idx)
+    if has["gamma"]:
+        in_specs.append(spec((1, N), lambda k, m_: (0, 0)))
+        args.append(gamma.reshape(1, N))
+    if has["x_scale"]:
+        in_specs.append(spec((bm, 1), lambda k, m_: (m_, 0)))
+        args.append(x_scale)
+    if has["glu"]:
+        in_specs.append(spec((Ncp, bk), lambda k, m_: (0, k)))
+        in_specs.append(spec((G, bk), lambda k, m_: (0, k)))
+        args.extend([w2_data, w2_scale])
+        if not row:
+            in_specs.append(spec((N // 8, bk), lambda k, m_: (0, k)))
+            args.append(w2_idx)
+    if has["bias"]:
+        in_specs.append(spec((1, bk), lambda k, m_: (0, k)))
+        args.append(bias.reshape(1, K))
+    if has["residual"]:
+        in_specs.append(spec((bm, bk), lambda k, m_: (m_, k)))
+        args.append(residual)
+    if has["requant"]:
+        in_specs.append(spec((bm, 1), lambda k, m_: (m_, 0)))
+        args.append(out_scale)
+
+    out_dtype = jnp.int8 if has["requant"] else jnp.float32
+    kern = functools.partial(_sparse_fused_kernel, bits=bits, n=n, m=m,
+                             n_rows=N, act=act, has=has,
+                             norm_group=norm_group, norm_eps=norm_eps,
+                             accum=accum)
+    cp = pltpu.CompilerParams(dimension_semantics=("arbitrary", "arbitrary"))
+    grid = (K // bk, M // bm)
+    out_shape = jax.ShapeDtypeStruct((M, K), out_dtype)
+    if row:
+        scalars = [w_idx] + ([w2_idx] if has["glu"] else [])
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=len(scalars), grid=grid, in_specs=in_specs,
+            out_specs=pl.BlockSpec((bm, bk), lambda k, m_, *sc: (m_, k)))
+        return pl.pallas_call(lambda *refs: kern(refs),
+                              grid_spec=grid_spec, out_shape=out_shape,
+                              compiler_params=cp,
+                              interpret=interpret)(*scalars, *args)
+    return pl.pallas_call(lambda *refs: kern(refs), grid=grid,
+                          in_specs=in_specs,
+                          out_specs=pl.BlockSpec((bm, bk),
+                                                 lambda k, m_: (m_, k)),
+                          out_shape=out_shape, compiler_params=cp,
+                          interpret=interpret)(*args)
+
+
+# ---------------------------------------------------------------------------
+# sparse rcw_matmul: the explicit double-buffered weight stream moves the
+# COMPRESSED (Ncp × bk) panel — per-panel DMA bytes shrink by ~n/m (plus
+# the bitmask for col), i.e. the paper's weight-update latency scales
+# with the sparsity factor. Phase-1/Phase-2 overlap is unchanged.
+# ---------------------------------------------------------------------------
+
+def _sparse_rcw_kernel(refs, *, bits, n, m, n_rows, bk, rcw, row):
+    if row:
+        idx_ref, w_hbm, x_ref, s_ref, o_ref, wbuf, sems = refs
+        b_ref = None
+    else:
+        idx_ref = None
+        w_hbm, x_ref, s_ref, b_ref, o_ref, wbuf, sems = refs
+    k, m_ = pl.program_id(0), pl.program_id(1)
+    nk = pl.num_programs(0)
+
+    def panel_copy(ki, slot):
+        return pltpu.make_async_copy(
+            w_hbm.at[:, pl.ds(ki * bk, bk)], wbuf.at[slot], sems.at[slot])
+
+    if rcw:
+        @pl.when((k == 0) & (m_ == 0))
+        def _():
+            cp = panel_copy(0, 0)
+            cp.start()
+            cp.wait()
+
+        @pl.when((m_ == 0) & (k + 1 < nk))
+        def _():
+            panel_copy(k + 1, (k + 1) % 2).start()
+
+        @pl.when((m_ == 0) & (k > 0))
+        def _():
+            panel_copy(k, k % 2).wait()
+    else:
+        @pl.when(m_ == 0)
+        def _():
+            cp = panel_copy(k, k % 2)
+            cp.start()
+            cp.wait()
+
+    nc = n_rows * n // m
+    if row:
+        xc = jnp.take(x_ref[...], idx_ref[...], axis=1)
+        vq = _unpack_vals(wbuf[k % 2], bits, nc)
+        o_ref[...] = _accumulate(xc, vq, s_ref[...], "f32")
+    else:
+        q = _expand_col_block(wbuf[k % 2], b_ref[...], bits=bits, n=n,
+                              m=m, n_rows=n_rows)
+        o_ref[...] = _accumulate(x_ref[...], q, s_ref[...], "f32")
+
+
+def sparse_rcw_matmul(x: jax.Array, w_data: jax.Array, w_scale: jax.Array,
+                      w_idx: jax.Array, *, n: int, m: int, bits: int = 4,
+                      bm: int = 128, bk: int = 128, rcw: bool = True,
+                      interpret: bool = False) -> jax.Array:
+    """Explicit-RCW sparse variant: compressed weights stay in HBM and
+    the kernel double-buffers (Ncp × bk) panels — the weight stream is
+    n/m the dense size. f32 accumulation (serving path)."""
+    M, N = x.shape
+    K = w_data.shape[1]
+    Ncp = w_data.shape[0]
+    G = w_scale.shape[0]
+    req_bm, req_bk = bm, bk
+    bm = min(bm, M)
+    bk = min(bk, K)
+    check_tileable("sparse_rcw_matmul", x.shape, w_data.shape,
+                   M, bm, req_bm, K, bk, req_bk)
+    grid = (K // bk, M // bm)
+    row = w_idx.ndim == 1
+    kern = functools.partial(_sparse_rcw_kernel, bits=bits, n=n, m=m,
+                             n_rows=N, bk=bk, rcw=rcw, row=row)
+    cp = pltpu.CompilerParams(dimension_semantics=("arbitrary", "arbitrary"))
+    out_shape = jax.ShapeDtypeStruct((M, K), jnp.float32)
+    scratch = [pltpu.VMEM((2, Ncp, bk), w_data.dtype),
+               pltpu.SemaphoreType.DMA((2,))]
+    if row:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1, grid=grid,
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+                pl.BlockSpec((bm, N), lambda k, m_, idx: (m_, 0)),
+                pl.BlockSpec((G, bk), lambda k, m_, idx: (0, k)),
+            ],
+            out_specs=pl.BlockSpec((bm, bk), lambda k, m_, idx: (m_, k)),
+            scratch_shapes=scratch)
+        return pl.pallas_call(lambda *refs: kern(refs),
+                              grid_spec=grid_spec, out_shape=out_shape,
+                              compiler_params=cp,
+                              interpret=interpret)(w_idx, w_data, x, w_scale)
+    return pl.pallas_call(
+        lambda *refs: kern(refs),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.MemorySpace.ANY),
+            pl.BlockSpec((bm, N), lambda k, m_: (m_, 0)),
+            pl.BlockSpec((G, bk), lambda k, m_: (0, k)),
+            pl.BlockSpec((N // 8, bk), lambda k, m_: (0, k)),  # bitmask
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda k, m_: (m_, k)),
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        compiler_params=cp,
+        interpret=interpret,
+    )(w_data, x, w_scale, w_idx)

@@ -36,6 +36,21 @@ from jax.experimental import pallas as pl
 from repro.kernels import pallas_compat as pltpu
 
 
+def check_tileable(kernel_name: str, x_shape, w_shape, m_dim: int, bm: int,
+                   req_bm: int, k_dim: int, bk: int, req_bk: int) -> None:
+    """RAISE (matching the PR 7 attention-kernel error style) when the
+    (K/bk, M/bm) grid cannot tile the problem — reporting the offending
+    shapes and the chosen block sizes instead of a bare assert."""
+    if m_dim % bm != 0 or k_dim % bk != 0:
+        raise ValueError(
+            f"{kernel_name}: grid cannot tile x {tuple(x_shape)} / w "
+            f"{tuple(w_shape)} — chose bm={bm} (requested {req_bm}) for "
+            f"M={m_dim}, bk={bk} (requested {req_bk}) for K={k_dim}, but "
+            f"M % bm == {m_dim % bm} and K % bk == {k_dim % bk}; pad the "
+            "operands or pass dividing block sizes (the hot loop must "
+            "not densify)")
+
+
 def _dequant_block(w_blk: jax.Array, scale_blk: jax.Array, bits: int,
                    n: int) -> jax.Array:
     """(Np, bk) packed/int8 block + (G, bk) scales → (N, bk) f32."""
@@ -76,9 +91,11 @@ def ws_ocs_matmul(x: jax.Array, w_data: jax.Array, w_scale: jax.Array, *,
     K = w_data.shape[1]
     Np = w_data.shape[0]            # N//2 when packed
     G = w_scale.shape[0]
+    req_bm, req_bk = bm, bk
     bm = min(bm, M)
     bk = min(bk, K)
-    assert M % bm == 0 and K % bk == 0, (M, bm, K, bk)
+    check_tileable("ws_ocs_matmul", x.shape, w_data.shape,
+                   M, bm, req_bm, K, bk, req_bk)
 
     grid = (K // bk, M // bm)       # weight-panel index OUTERMOST (WS-OCS)
     kernel = functools.partial(_panel_kernel, bits=bits, n=N)
@@ -210,9 +227,11 @@ def fused_matmul(x: jax.Array, w_data: jax.Array, w_scale: jax.Array, *,
     K = w_data.shape[1]
     Np = w_data.shape[0]
     G = w_scale.shape[0]
+    req_bm, req_bk = bm, bk
     bm = min(bm, M)
     bk = min(bk, K)
-    assert M % bm == 0 and K % bk == 0, (M, bm, K, bk)
+    check_tileable("fused_matmul", x.shape, w_data.shape,
+                   M, bm, req_bm, K, bk, req_bk)
     if gamma is not None:
         norm_group = min(norm_group, N)
         assert N % norm_group == 0, (N, norm_group)
@@ -322,9 +341,11 @@ def rcw_matmul(x: jax.Array, w_data: jax.Array, w_scale: jax.Array, *,
     K = w_data.shape[1]
     Np = w_data.shape[0]
     G = w_scale.shape[0]
+    req_bm, req_bk = bm, bk
     bm = min(bm, M)
     bk = min(bk, K)
-    assert M % bm == 0 and K % bk == 0, (M, bm, K, bk)
+    check_tileable("rcw_matmul", x.shape, w_data.shape,
+                   M, bm, req_bm, K, bk, req_bk)
 
     grid = (K // bk, M // bm)
     kernel = functools.partial(_rcw_kernel, bits=bits, n=N, bk=bk, rcw=rcw)

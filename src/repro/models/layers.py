@@ -12,6 +12,7 @@ All normalization / softmax / quantized-matmul calls route through
 from __future__ import annotations
 
 import dataclasses
+import re
 from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax
@@ -180,17 +181,41 @@ def make_linear(mk: Maker, name: str, d_in: int, d_out: int,
     return p
 
 
+_SPARSE_KEY = re.compile(r"sp(\d+)of(\d+)$")
+
+
+def sparse_meta(w: Dict) -> Optional[Tuple[str, int, int]]:
+    """(key, n, m) when a quantized-weight dict carries N:M-compressed
+    storage (a ``sp{n}of{m}`` metadata leaf, §14); None for dense. The
+    ratio lives in the KEY so it stays static under vmap/scan; the
+    granularity travels in the leaf's ndim (1 row / 2 col)."""
+    for k in w:
+        mm = _SPARSE_KEY.match(k)
+        if mm:
+            return k, int(mm.group(1)), int(mm.group(2))
+    return None
+
+
 def apply_linear(p: Dict, x: jax.Array, cfg: Optional[ModelConfig] = None) -> jax.Array:
     """x (..., d_in) @ w — through the quantized WS-OCS path when the
     config requests it and the weight is a serving-time QuantizedWeight
-    (dict with 'q'/'scale'); plain dot otherwise (training)."""
+    (dict with 'q'/'scale'); N:M-compressed weights (extra sp{n}of{m}
+    leaf) route through the sparse kernel family; plain dot otherwise
+    (training)."""
     w = p["w"]
     if isinstance(w, dict):  # quantized serving weights (dtype carries bits)
         bits = 4 if w["q"].dtype == jnp.uint8 else 8
         lead = x.shape[:-1]
         x2 = x.reshape(-1, x.shape[-1])
-        out = ops.ws_ocs_matmul(x2, w["q"], w["scale"], bits=bits,
-                                rcw=bool(cfg.rcw) if cfg else True)
+        sp = sparse_meta(w)
+        if sp is not None:
+            key, sn, sm = sp
+            out = ops.sparse_ws_ocs_matmul(
+                x2, w["q"], w["scale"], w[key], n=sn, m=sm, bits=bits,
+                rcw=bool(cfg.rcw) if cfg else True)
+        else:
+            out = ops.ws_ocs_matmul(x2, w["q"], w["scale"], bits=bits,
+                                    rcw=bool(cfg.rcw) if cfg else True)
         out = out.reshape(lead + (out.shape[-1],)).astype(x.dtype)
     else:
         out = jnp.dot(x, w.astype(x.dtype))
@@ -488,6 +513,15 @@ def fused_decode_applicable(lp: Dict, cfg: ModelConfig, x: jax.Array,
 def _fused_linear(p: Dict, x2: jax.Array, **kw) -> jax.Array:
     w = p["w"]
     bits = 4 if w["q"].dtype == jnp.uint8 else 8
+    sp = sparse_meta(w)
+    if sp is not None:
+        key, sn, sm = sp
+        return ops.sparse_fused_matmul(x2, w["q"], w["scale"], w[key],
+                                       n=sn, m=sm, bits=bits,
+                                       bias=p.get("b"), **kw)
+    # a GLU gate can only be sparse together with its main weight (they
+    # share a shape, so sparsify eligibility is identical)
+    assert "w2_idx" not in kw, "sparse GLU gate on a dense main weight"
     return ops.fused_matmul(x2, w["q"], w["scale"], bits=bits,
                             bias=p.get("b"), **kw)
 
@@ -545,9 +579,13 @@ def apply_decoder_layer_fused(lp: Dict, cfg: ModelConfig, x: jax.Array,
         h_src, res, g2 = x1, x1, lp["ln2"]["gamma"]
     if "wg" in mp:
         # SwiGLU: gate GEMM + up GEMM + SiLU + product in one dispatch
+        w2 = mp["wi"]["w"]
+        kw2 = dict(w2_data=w2["q"], w2_scale=w2["scale"])
+        sp2 = sparse_meta(w2)
+        if sp2 is not None:               # wg/wi share a shape → same
+            kw2["w2_idx"] = w2[sp2[0]]    # sparsify eligibility
         h = _fused_linear(mp["wg"], h_src, gamma=g2, norm_group=ng,
-                          act="silu", w2_data=mp["wi"]["w"]["q"],
-                          w2_scale=mp["wi"]["w"]["scale"])
+                          act="silu", **kw2)
     else:
         h = _fused_linear(mp["wi"], h_src, gamma=g2, norm_group=ng,
                           act="gelu")

@@ -37,6 +37,15 @@ REPRO_OPT_SHARDKV      1        multi-device paged serving shards the
                                 baseline — outputs identical, per-
                                 device KV bytes ×data larger)
                                 (parallel/sharding.paged_rules)
+REPRO_OPT_SPARSESKIP   0        off-TPU row-granular N:M-sparse matmuls
+                                lower to the compressed-skip reference
+                                (gather kept activation columns,
+                                contract only kept rows — the measured
+                                speedup arm); 0 = the dense-mask
+                                reconstruction, bit-identical to the
+                                dense-masked checkpoint so serving
+                                stays token-identical (DESIGN.md §14)
+                                (kernels/ops.py)
 REPRO_BASELINE         0        1 = force every REPRO_OPT_* flag off at
                                 once (here)
 REPRO_CHUNK_ORACLE     0        1 = pin every chunked-prefill/verify
@@ -59,6 +68,9 @@ REPRO_BENCH_PR7_JSON   unset    path override for the speculative/beam
                                 row artifact (benchmarks/run.py)
 REPRO_BENCH_PR8_JSON   unset    path override for the multi-device
                                 sharded-serving row artifact
+                                (benchmarks/run.py)
+REPRO_BENCH_PR9_JSON   unset    path override for the structured-
+                                sparsity row artifact
                                 (benchmarks/run.py)
 =====================  =======  =========================================
 """

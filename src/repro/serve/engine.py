@@ -17,7 +17,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.quant import QuantConfig, quantize_weight
+from repro.core.quant import (QuantConfig, SparsityConfig, nm_prune_mask,
+                              parse_sparsity, quantize_weight, sparse_ok,
+                              sparsify_weight)
 from repro.models import api
 from repro.models.layers import is_axes_leaf
 
@@ -29,7 +31,13 @@ class ServeConfig:
     seed: int = 0
 
 
-def _quantize_one(w, qc: QuantConfig) -> Dict:
+def _quantize_one(w, qc: QuantConfig,
+                  sp: Optional[SparsityConfig] = None) -> Dict:
+    if sp is not None and sparse_ok(w.shape[0], sp):
+        sw = sparsify_weight(w, qc, sp)
+        # n/m ride in the KEY name (static under vmap/scan); granularity
+        # is recovered from the metadata leaf's ndim in layers.py
+        return {"q": sw.data, "scale": sw.scale, sp.key: sw.idx}
     qw = quantize_weight(w, qc)
     return {"q": qw.data, "scale": qw.scale}
 
@@ -40,10 +48,19 @@ def quantize_params(params: Dict, cfg: ModelConfig,
     layer-stacked 3-D) per cfg.quant_mode. The bit-width travels in the
     dtype (uint8 = nibble-packed INT4, int8 = INT8) so the quantized dict
     scans cleanly over layers. Norm scales / biases / embeddings stay
-    high precision (the paper keeps nonlinear paths FP16)."""
+    high precision (the paper keeps nonlinear paths FP16).
+
+    ``cfg.sparsity`` ("2:4" / "n:m:row", §14) additionally prunes and
+    compresses every eligible weight to structured N:M storage — pruning
+    happens BEFORE quantization on the dense float weight, so the stored
+    codes and scales are bit-identical to quantizing the masked dense
+    weight (see ``prune_params``) and serving stays token-identical to
+    the dense-masked equivalent checkpoint. Ineligible shapes (partial
+    m-groups / non-byte-aligned bitmask rows) quantize dense as before."""
     if cfg.quant_mode == "bf16":
         return params
     qc = QuantConfig(cfg.quant_mode, cfg.quant_group)
+    sp = parse_sparsity(cfg.sparsity)
 
     def walk(node):
         if isinstance(node, dict):
@@ -51,10 +68,43 @@ def quantize_params(params: Dict, cfg: ModelConfig,
             for k, v in node.items():
                 if k == "w" and hasattr(v, "ndim") and v.ndim == 2 \
                         and v.shape[0] % 2 == 0:
-                    out[k] = _quantize_one(v, qc)
+                    out[k] = _quantize_one(v, qc, sp)
                 elif k == "w" and hasattr(v, "ndim") and v.ndim == 3 \
                         and v.shape[1] % 2 == 0:
-                    out[k] = jax.vmap(lambda w2: _quantize_one(w2, qc))(v)
+                    out[k] = jax.vmap(lambda w2: _quantize_one(w2, qc, sp))(v)
+                else:
+                    out[k] = walk(v)
+            return out
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        return node
+
+    return walk(params)
+
+
+def prune_params(params: Dict, cfg: ModelConfig) -> Dict:
+    """Dense-masked equivalent of ``cfg.sparsity``: magnitude-prune the
+    SAME leaves ``quantize_params`` would compress, but keep them dense
+    (weights multiplied by the N:M keep-mask). Quantizing the result
+    with ``cfg.replace(sparsity="")`` yields the dense-masked checkpoint
+    a sparse one must serve token-identically to."""
+    sp = parse_sparsity(cfg.sparsity)
+    if sp is None or cfg.quant_mode == "bf16":
+        return params
+
+    def prune(w):
+        return w * nm_prune_mask(w, sp).astype(w.dtype)
+
+    def walk(node):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if k == "w" and hasattr(v, "ndim") and v.ndim == 2 \
+                        and v.shape[0] % 2 == 0 and sparse_ok(v.shape[0], sp):
+                    out[k] = prune(v)
+                elif k == "w" and hasattr(v, "ndim") and v.ndim == 3 \
+                        and v.shape[1] % 2 == 0 and sparse_ok(v.shape[1], sp):
+                    out[k] = jax.vmap(prune)(v)
                 else:
                     out[k] = walk(v)
             return out

@@ -334,27 +334,32 @@ def disaggregated_serving_report(n_requests: int = 16,
 # Prefill — Fig 9(a), Fig 8
 # ---------------------------------------------------------------------------
 
-def prefill_dram_bytes(df: Dataflow, tokens: int = 1024) -> float:
+def prefill_dram_bytes(df: Dataflow, tokens: int = 1024,
+                       weight_scale: float = 1.0) -> float:
     """External DRAM bytes for one 1024-token prefill (Table-I formulas
-    over the Llama GEMM set; INT8 activations, INT4 weights)."""
+    over the Llama GEMM set; INT8 activations, INT4 weights).
+    ``weight_scale`` shrinks the weight-stream term only — the N:M
+    compression factor from ``sparse_weight_factor`` (§14)."""
     total = 0.0
     for N, K, cnt in GEOM.gemms:
         tc = TileConfig(M=tokens, N=N, K=K,
                         m=min(TILE_M, tokens), n=min(TILE_N, N),
                         k=min(TILE_K, K))
         c = access_counts(df, tc)
-        total += (c["input"] * 1.0 + c["weight"] * 0.5
+        total += (c["input"] * 1.0 + c["weight"] * 0.5 * weight_scale
                   + c["output"] * 1.0) * cnt * GEOM.layers
     return total
 
 
-def prefill_update_bytes(df: Dataflow, tokens: int = 1024) -> float:
+def prefill_update_bytes(df: Dataflow, tokens: int = 1024,
+                         weight_scale: float = 1.0) -> float:
     total = 0.0
     for N, K, cnt in GEOM.gemms:
         tc = TileConfig(M=tokens, N=N, K=K,
                         m=min(TILE_M, tokens), n=min(TILE_N, N),
                         k=min(TILE_K, K))
-        total += access_counts(df, tc)["cim_update"] * 0.5 * cnt * GEOM.layers
+        total += access_counts(df, tc)["cim_update"] * 0.5 * weight_scale \
+            * cnt * GEOM.layers
     return total
 
 
@@ -377,6 +382,114 @@ def prefill_latency(df: Dataflow, tokens: int = 1024, rcw: bool = True,
 
 def prefill_per_token_ms(tokens: int = 1024) -> float:
     return prefill_latency(Dataflow.WS_OCS, tokens) / tokens * 1e3
+
+
+# ---------------------------------------------------------------------------
+# Structured N:M weight sparsity (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+def sparse_weight_factor(n: int, m: int, granularity: str = "col",
+                         bits: int = 4, k: int = None) -> float:
+    """Compressed weight-stream bytes as a fraction of the dense stream.
+    'col' stores n/m of the values plus a 1-bit-per-element keep bitmask
+    (w4 2:4 → (2+1)/4 = 0.75, the 25 % panel-DMA saving the sparse RCW
+    kernel realizes per K-tile); 'row' keeps whole rows, whose int32
+    kept-row indices amortize over the K columns of each row and are
+    negligible at model-sized K."""
+    assert 0 < n < m, (n, m)
+    val = bits * n / m
+    if granularity == "col":
+        meta = 1.0
+    else:
+        meta = 32.0 * (n / m) / float(k or GEOM.d_model)
+    return (val + meta) / bits
+
+
+def sparse_weight_bytes(n: int, m: int, granularity: str = "col",
+                        bits: int = 4) -> float:
+    """Compressed matmul-weight footprint (values + N:M metadata)."""
+    return GEOM.weight_bytes(bits) \
+        * sparse_weight_factor(n, m, granularity, bits)
+
+
+def sparse_decode_latency(n: int, m: int, granularity: str = "col",
+                          rcw: bool = True, fusion: bool = True,
+                          ctx: int = 1024, chip: RCWCIMChip = RCWCIM,
+                          bits: int = 4) -> float:
+    """Per-token decode latency with N:M-compressed weight streaming on a
+    sparsity-gated CIM array: the DRAM stream and the CIM update both
+    shrink by ``sparse_weight_factor`` (only nonzero groups + metadata
+    cross the chip boundary or get written), and the MAC term scales by
+    the n/m keep fraction (zero weight groups never enter the array, so
+    their MACs are skipped — the paper's structured-sparse CIM mode).
+    Nonlinear work is activation-shaped and unchanged."""
+    f = sparse_weight_factor(n, m, granularity, bits)
+    t_dram = t_dram_weights(chip, bits) * f
+    t_upd = GEOM.weight_bytes(bits) * f / CIM_WRITE_BW
+    t_mac = t_mac_per_token(chip) * (n / m)
+    t_nl = t_nl_per_token(fusion, ctx, chip)
+    if rcw:
+        return max(t_dram, t_upd) + t_mac + t_nl
+    return t_dram + t_upd + t_mac + t_nl
+
+
+def sparse_prefill_latency(n: int, m: int, granularity: str = "col",
+                           tokens: int = 1024, rcw: bool = True,
+                           chip: RCWCIMChip = RCWCIM,
+                           bits: int = 4) -> float:
+    """Prefill latency with N:M sparsity: MACs scale by n/m, the DRAM
+    weight-stream term by the compression factor; the exposed-stall
+    structure matches ``prefill_latency``."""
+    f = sparse_weight_factor(n, m, granularity, bits)
+    t_mac = t_mac_per_token(chip) * (n / m) * tokens / MAC_UTIL
+    t_dram = prefill_dram_bytes(Dataflow.WS_OCS, tokens,
+                                weight_scale=f) / (chip.dram_gbps * 1e9)
+    if rcw:
+        exposed = 0.0
+    else:
+        exposed = prefill_update_bytes(Dataflow.WS_OCS, tokens,
+                                       weight_scale=f) / STALL_WRITE_BW
+    return max(t_mac, t_dram) + exposed
+
+
+def sparsity_report(n: int = 2, m: int = 4, granularity: str = "col",
+                    bits: int = 4, ctx: int = 1024,
+                    tokens: int = 1024) -> Dict[str, float]:
+    """Dense vs N:M-sparse Dataflow rows (§14): weight footprint, prefill
+    DRAM bytes, CIM weight-update bytes, and prefill/decode latency —
+    each sparse number next to its dense WS-OCS baseline so the BENCH
+    table shows what the compressed stream buys on top of Fig-8/Fig-9."""
+    f = sparse_weight_factor(n, m, granularity, bits)
+    d_wb = GEOM.weight_bytes(bits)
+    d_dram = prefill_dram_bytes(Dataflow.WS_OCS, tokens)
+    s_dram = prefill_dram_bytes(Dataflow.WS_OCS, tokens, weight_scale=f)
+    d_upd = prefill_update_bytes(Dataflow.WS_OCS, tokens)
+    s_upd = prefill_update_bytes(Dataflow.WS_OCS, tokens, weight_scale=f)
+    d_dec = decode_latency(rcw=True, fusion=True, ctx=ctx)
+    s_dec = sparse_decode_latency(n, m, granularity, ctx=ctx, bits=bits)
+    d_pre = prefill_latency(Dataflow.WS_OCS, tokens)
+    s_pre = sparse_prefill_latency(n, m, granularity, tokens, bits=bits)
+    return {
+        "n": n, "m": m, "granularity": granularity,
+        "weight_factor": f,
+        "dense_weight_mb": d_wb / 1e6,
+        "sparse_weight_mb": d_wb * f / 1e6,
+        "weight_reduction": 1 - f,
+        "dense_prefill_dram_mb": d_dram / 1e6,
+        "sparse_prefill_dram_mb": s_dram / 1e6,
+        "dram_reduction": 1 - s_dram / d_dram,
+        "dense_update_mb": d_upd / 1e6,
+        "sparse_update_mb": s_upd / 1e6,
+        "update_reduction": 1 - s_upd / d_upd,
+        "dense_decode_ms": d_dec * 1e3,
+        "sparse_decode_ms": s_dec * 1e3,
+        "decode_speedup": d_dec / s_dec,
+        "dense_prefill_s": d_pre,
+        "sparse_prefill_s": s_pre,
+        "prefill_speedup": d_pre / s_pre,
+        "dense_tokens_per_s": 1 / d_dec,
+        "sparse_tokens_per_s": 1 / s_dec,
+    }
 
 
 # ---------------------------------------------------------------------------

@@ -1,7 +1,8 @@
 """Tier-1 exercise of the benchmark perf rows: the smoke gate must run
-the PR 3 fused rows, the PR 5 paged-serving rows, and the PR 6
-chunked-prefill kernelization rows end-to-end and write
-BENCH_pr3.json / BENCH_pr5.json / BENCH_pr6.json."""
+the PR 3 fused rows, the PR 5 paged-serving rows, the PR 6
+chunked-prefill kernelization rows, and the PR 9 structured-sparsity
+rows end-to-end and write BENCH_pr3.json / BENCH_pr5.json /
+BENCH_pr6.json / BENCH_pr9.json."""
 import json
 import os
 import subprocess
@@ -19,9 +20,11 @@ def test_bench_smoke_fast_rows(tmp_path):
     out = tmp_path / "BENCH_pr3.json"
     out5 = tmp_path / "BENCH_pr5.json"
     out6 = tmp_path / "BENCH_pr6.json"
+    out9 = tmp_path / "BENCH_pr9.json"
     env = dict(os.environ, PYTHONPATH="src", REPRO_BENCH_JSON=str(out),
                REPRO_BENCH_PR5_JSON=str(out5),
-               REPRO_BENCH_PR6_JSON=str(out6))
+               REPRO_BENCH_PR6_JSON=str(out6),
+               REPRO_BENCH_PR9_JSON=str(out9))
     proc = subprocess.run(
         [sys.executable, "benchmarks/smoke.py", "--fast"], cwd=ROOT,
         capture_output=True, text=True, timeout=560, env=env)
@@ -66,3 +69,15 @@ def test_bench_smoke_fast_rows(tmp_path):
         - int(disp["kernel"]["dot_general"]) == 2, disp
     assert int(disp["oracle"]["gather"]) \
         - int(disp["kernel"]["gather"]) >= 2, disp
+    # PR 9 rows: the row-skip sparse matmul must not lose to the
+    # dense-masked baseline (≥1.5× in the full bench; ≥1.0× here — fast
+    # smoke shares the machine with the rest of the suite), the sparse
+    # int-accumulation kernel must match the dense-masked reference bit
+    # for bit, and 2:4-sparse serving must stay token-identical
+    rows9 = {r["name"]: _kv(r["derived"])
+             for r in json.loads(out9.read_text())["rows"]}
+    sp = rows9["sparse_matmul_speedup"]
+    assert float(sp["speedup"].rstrip("x")) >= 1.0, sp
+    assert rows9["sparse_bitexact_int"]["bit_exact"] == "True", rows9
+    assert rows9["sparse_sched_sparse"]["tokens_identical"] == "True", rows9
+    assert float(rows9["sparse_panel_bytes"]["reduction"]) == 0.25, rows9

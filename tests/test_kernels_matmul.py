@@ -65,6 +65,28 @@ def test_weight_panel_stationarity_traffic(rng):
     assert idx(3, 0) == idx(3, 99)  # stationary across the m sweep
 
 
+@pytest.mark.parametrize("fn", ["ws", "fused", "rcw"])
+def test_untileable_error_reports_shapes(rng, fn):
+    """Indivisible grid shapes must raise a ValueError naming the
+    offending operand shapes and the chosen vs requested block sizes
+    (PR 7 attention-kernel error style), not a bare assert."""
+    from repro.kernels.ws_ocs_matmul import fused_matmul
+    qw = _qw(rng, 32, 48)
+    x = jnp.asarray(rng.standard_normal((10, 32)).astype(np.float32))
+    call = {
+        "ws": lambda: ws_ocs_matmul(x, qw.data, qw.scale, bits=4,
+                                    bm=4, bk=48, interpret=True),
+        "fused": lambda: fused_matmul(x, qw.data, qw.scale, bits=4,
+                                      bm=4, bk=48, interpret=True),
+        "rcw": lambda: rcw_matmul(x, qw.data, qw.scale, bits=4,
+                                  bm=4, bk=48, interpret=True),
+    }[fn]
+    with pytest.raises(ValueError) as ei:
+        call()
+    msg = str(ei.value)
+    assert "(10, 32)" in msg and "bm=4" in msg and "M % bm == 2" in msg, msg
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_input_dtypes(rng, dtype):
     M, N, K = 32, 128, 64

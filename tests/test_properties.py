@@ -34,6 +34,33 @@ def test_pack_unpack_int4_roundtrip(n2, k, seed):
 
 
 @S
+@given(st.integers(1, 65), st.integers(1, 33), st.integers(0, 1),
+       st.integers(0, 2**31 - 1))
+def test_pack_unpack_int4_odd_lengths(n, k, axis, seed):
+    """Odd packed-axis lengths zero-pad to a nibble boundary; the ``n=``
+    trim on unpack restores the exact original (both axes)."""
+    rng = np.random.default_rng(seed)
+    q = rng.integers(-8, 8, size=(n, k)).astype(np.int8)
+    packed = pack_int4(jnp.asarray(q), axis=axis)
+    dim = (n, k)[axis]
+    assert packed.shape[axis] == (dim + 1) // 2
+    out = np.asarray(unpack_int4(packed, axis=axis, n=dim))
+    np.testing.assert_array_equal(out, q)
+
+
+@S
+@given(st.integers(1, 64), st.integers(1, 33), st.integers(0, 2**31 - 1))
+def test_pack_unpack_bitmask_roundtrip(n8, k, seed):
+    from repro.core.quant import pack_bitmask, unpack_bitmask
+    rng = np.random.default_rng(seed)
+    mask = rng.integers(0, 2, size=(8 * n8, k)).astype(bool)
+    packed = pack_bitmask(jnp.asarray(mask))
+    assert packed.shape == (n8, k) and packed.dtype == jnp.uint8
+    out = np.asarray(unpack_bitmask(packed, 8 * n8))
+    np.testing.assert_array_equal(out, mask)
+
+
+@S
 @given(st.integers(1, 8), st.integers(1, 64), st.integers(0, 2**31 - 1))
 def test_int8_quant_error_bound(rows, cols, seed):
     rng = np.random.default_rng(seed)

@@ -1,0 +1,451 @@
+"""Structured N:M weight sparsity (DESIGN.md §14): prune/compact/expand
+round-trips, the sparse WS-OCS kernel family vs the dense-mask
+reconstruction reference (f32 tolerance + bit-exact int accumulation),
+untileable-shape error reporting, the quantize/prune params walk, and
+end-to-end token identity of a 2:4-sparse checkpoint vs its dense-masked
+equivalent through the Engine and the paged Scheduler.
+
+Bit-exactness caveat (see ``ref.int_group_matmul_ref``): XLA contracts
+the f32 scale-combine mul+add into an FMA below HLO, so eager and
+compiled evaluations of the same chain differ by ~1 ulp. All bit-level
+comparisons here are jit-vs-jit (the interpret-mode kernel is compiled),
+where both sides share one contraction.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.quant import (QuantConfig, SparsityConfig, compact_nm,
+                              expand_nm, mask_rank, nm_prune_mask,
+                              pack_bitmask, parse_sparsity, quantize_weight,
+                              sparse_ok, sparsify_weight, unpack_bitmask)
+from repro.kernels import ref, sparse_matmul as sm
+from repro.models import api
+from repro.serve.engine import (Engine, ServeConfig, prune_params,
+                                quantize_params)
+
+SPECS = [SparsityConfig(2, 4, "col"), SparsityConfig(2, 4, "row"),
+         SparsityConfig(1, 4, "col"), SparsityConfig(3, 8, "row")]
+
+
+def _sw(rng, n, k, sp, mode="w4a8", group=16):
+    w = jnp.asarray(rng.standard_normal((n, k)), jnp.float32)
+    qc = QuantConfig(mode, group)
+    sw = sparsify_weight(w, qc, sp)
+    wd = w * nm_prune_mask(w, sp).astype(w.dtype)
+    qw = quantize_weight(wd, qc)
+    return w, sw, qw
+
+
+# ---------------------------------------------------------------------------
+# config parsing / pruning invariants
+# ---------------------------------------------------------------------------
+
+def test_parse_sparsity():
+    assert parse_sparsity("") is None
+    assert parse_sparsity(None) is None
+    sp = parse_sparsity("2:4")
+    assert (sp.n, sp.m, sp.granularity) == (2, 4, "col")
+    assert sp.key == "sp2of4"
+    assert abs(sp.keep_frac - 0.5) < 1e-9
+    sp = parse_sparsity("3:8:row")
+    assert (sp.n, sp.m, sp.granularity) == (3, 8, "row")
+    for bad in ("4:4", "0:4", "5:4", "x:y", "2:4:diag"):
+        with pytest.raises(ValueError):
+            parse_sparsity(bad)
+
+
+@pytest.mark.parametrize("sp", SPECS, ids=lambda s: s.key + s.granularity)
+def test_prune_mask_keeps_exactly_n_per_group(rng, sp):
+    w = jnp.asarray(rng.standard_normal((32, 24)), jnp.float32)
+    mask = np.asarray(nm_prune_mask(w, sp))
+    if sp.granularity == "col":
+        per_group = mask.reshape(32 // sp.m, sp.m, 24).sum(axis=1)
+        assert (per_group == sp.n).all()
+    else:
+        kept_rows = mask.all(axis=1)
+        dropped = ~mask.any(axis=1)
+        assert (kept_rows | dropped).all()      # whole rows only
+        assert (kept_rows.reshape(-1, sp.m).sum(axis=1) == sp.n).all()
+    # magnitude property: every kept |w| ≥ every dropped |w| within its
+    # selection group
+    a = np.abs(np.asarray(w))
+    if sp.granularity == "col":
+        g = a.reshape(-1, sp.m, 24)
+        mg = mask.reshape(-1, sp.m, 24)
+        kept_min = np.where(mg, g, np.inf).min(axis=1)
+        drop_max = np.where(~mg, g, -np.inf).max(axis=1)
+        assert (kept_min >= drop_max).all()
+    else:
+        s = a.sum(axis=1).reshape(-1, sp.m)
+        mg = kept_rows.reshape(-1, sp.m)
+        assert (np.where(mg, s, np.inf).min(axis=1)
+                >= np.where(~mg, s, -np.inf).max(axis=1)).all()
+
+
+def test_bitmask_roundtrip(rng):
+    mask = jnp.asarray(rng.integers(0, 2, size=(40, 17)), bool)
+    packed = pack_bitmask(mask)
+    assert packed.dtype == jnp.uint8 and packed.shape == (5, 17)
+    assert (np.asarray(unpack_bitmask(packed, 40)) == np.asarray(mask)).all()
+
+
+@pytest.mark.parametrize("sp", SPECS, ids=lambda s: s.key + s.granularity)
+def test_compact_expand_roundtrip(rng, sp):
+    n_rows, k = 32, 12
+    w = jnp.asarray(rng.standard_normal((n_rows, k)), jnp.float32)
+    mask = nm_prune_mask(w, sp)
+    q = jnp.asarray(rng.integers(-8, 8, size=(n_rows, k)), jnp.int8)
+    qm = q * mask.astype(q.dtype)
+    vals, idx = compact_nm(qm, mask, sp)
+    assert vals.shape[0] == n_rows * sp.n // sp.m
+    back = expand_nm(vals, idx, sp, n_rows)
+    assert (np.asarray(back) == np.asarray(qm)).all()
+
+
+def test_mask_rank_is_exclusive_cumsum():
+    mask = jnp.asarray([[1, 0], [0, 1], [1, 1], [0, 0]], bool)
+    r = np.asarray(mask_rank(mask, 4))
+    assert (r[:, 0] == [0, 1, 1, 2]).all()
+    assert (r[:, 1] == [0, 0, 1, 2]).all()
+
+
+@pytest.mark.parametrize("sp", SPECS, ids=lambda s: s.key + s.granularity)
+@pytest.mark.parametrize("mode", ["w4a8", "w8a8"])
+def test_sparsify_matches_dense_masked_quantization(rng, sp, mode):
+    """The §14 contract: compressed codes/scales are bit-identical to
+    quantizing the dense-masked weight, so expand→dequantize reproduces
+    the dense-masked checkpoint exactly."""
+    w, sw, qw = _sw(rng, 32, 16, sp, mode)
+    assert (np.asarray(sw.scale) == np.asarray(qw.scale)).all()
+    exp = ref.sparse_expand_q_ref(sw.data, sw.idx, n=sp.n, m=sp.m,
+                                  bits=sw.bits, n_rows=32)
+    from repro.core.quant import unpack_int4
+    dense_q = unpack_int4(qw.data, axis=0) if mode == "w4a8" else qw.data
+    assert (np.asarray(exp) == np.asarray(dense_q)).all()
+    assert (np.asarray(sw.dequantize()) == np.asarray(qw.dequantize())).all()
+
+
+def test_sparse_ok_eligibility():
+    col, row = SparsityConfig(2, 4, "col"), SparsityConfig(2, 4, "row")
+    assert sparse_ok(32, col) and sparse_ok(32, row)
+    assert not sparse_ok(30, col)        # 30 % 8 != 0 (bitmask bytes)
+    assert not sparse_ok(18, col)
+    assert not sparse_ok(18, row)        # 18 % 4 != 0
+    assert sparse_ok(4, row)             # Nc = 2, even → nibble-packable
+    assert sparse_ok(8, row)
+    assert not sparse_ok(4, SparsityConfig(1, 4, "row"))  # Nc = 1, odd
+
+
+# ---------------------------------------------------------------------------
+# kernels vs reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sp", SPECS, ids=lambda s: s.key + s.granularity)
+@pytest.mark.parametrize("bm,bk", [(16, 48), (8, 24)])
+def test_sparse_ws_ocs_matches_ref_f32(rng, sp, bm, bk):
+    M, N, K = 16, 32, 48
+    w, sw, qw = _sw(rng, N, K, sp)
+    x = jnp.asarray(rng.standard_normal((M, N)), jnp.float32)
+    want = ref.ws_ocs_matmul_ref(x, qw.data, qw.scale, bits=4)
+    got = sm.sparse_ws_ocs_matmul(x, sw.data, sw.scale, sw.idx,
+                                  n=sp.n, m=sp.m, bits=4, bm=bm, bk=bk,
+                                  interpret=True)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("sp", SPECS[:2], ids=lambda s: s.granularity)
+@pytest.mark.parametrize("mode", ["w4a8", "w8a8"])
+def test_sparse_ws_ocs_int_accum_bit_exact(rng, sp, mode):
+    M, N, K = 8, 32, 16
+    w, sw, qw = _sw(rng, N, K, sp, mode)
+    xq = jnp.asarray(rng.integers(-8, 8, size=(M, N)), jnp.int8)
+    xs = jnp.asarray(rng.uniform(0.5, 2.0, size=(M, 1)), jnp.float32)
+    got = sm.sparse_ws_ocs_matmul(xq, sw.data, sw.scale, sw.idx,
+                                  n=sp.n, m=sp.m, bits=sw.bits, x_scale=xs,
+                                  accum="int32", bm=M, bk=K, interpret=True)
+    want = jax.jit(lambda: ref.sparse_ws_ocs_matmul_ref(
+        xq, sw.data, sw.scale, sw.idx, n=sp.n, m=sp.m, bits=sw.bits,
+        x_scale=xs, accum="int32"))()
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def test_row_skip_ref_int_matches_dense_mask_int(rng):
+    """Dropped rows contribute exactly zero, so the compressed-skip
+    lowering's INT32 partials equal the dense-mask reconstruction's
+    partials bit for bit per scale group. The f32 scale-combine is only
+    ~1-ulp close between the two lowerings (XLA contracts each chain's
+    mul+add independently), which is why token identity is defined
+    against the dense-mask default, not REPRO_OPT_SPARSESKIP."""
+    from repro.core.quant import unpack_int4
+    sp = SparsityConfig(2, 4, "row")
+    M, N, K = 8, 32, 16
+    w, sw, qw = _sw(rng, N, K, sp)
+    xq = jnp.asarray(rng.integers(-8, 8, size=(M, N)), jnp.int8)
+    xs = jnp.asarray(rng.uniform(0.5, 2.0, size=(M, 1)), jnp.float32)
+    q_dense = ref.sparse_expand_q_ref(sw.data, sw.idx, n=2, m=4, bits=4,
+                                      n_rows=N)
+    vals = unpack_int4(sw.data, axis=0, n=N // 2)
+    xc = jnp.take(xq, sw.idx, axis=1)
+    G = sw.scale.shape[0]
+    for gi in range(G):
+        gs_d, gs_c = N // G, (N // 2) // G
+        pd = xq[:, gi * gs_d:(gi + 1) * gs_d].astype(jnp.int32) \
+            @ q_dense[gi * gs_d:(gi + 1) * gs_d].astype(jnp.int32)
+        pc = xc[:, gi * gs_c:(gi + 1) * gs_c].astype(jnp.int32) \
+            @ vals[gi * gs_c:(gi + 1) * gs_c].astype(jnp.int32)
+        assert (np.asarray(pd) == np.asarray(pc)).all(), gi
+    a = jax.jit(lambda: ref.sparse_skip_matmul_ref(
+        xq, sw.data, sw.scale, sw.idx, n=2, m=4, bits=4, x_scale=xs,
+        accum="int32"))()
+    b = jax.jit(lambda: ref.sparse_ws_ocs_matmul_ref(
+        xq, sw.data, sw.scale, sw.idx, n=2, m=4, bits=4, x_scale=xs,
+        accum="int32"))()
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("sp", SPECS[:2], ids=lambda s: s.granularity)
+def test_sparse_fused_full_epilogue_matches_ref(rng, sp):
+    """norm → GEMM → SiLU·GLU → bias → residual → requant, sparse main
+    AND sparse gate."""
+    M, N, K = 16, 32, 32
+    w, sw, _ = _sw(rng, N, K, sp)
+    w2, sw2, _ = _sw(rng, N, K, sp)
+    x = jnp.asarray(rng.standard_normal((M, N)), jnp.float32)
+    gamma = jnp.asarray(rng.standard_normal((N,)), jnp.float32)
+    bias = jnp.asarray(rng.standard_normal((K,)), jnp.float32)
+    res = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+    kw = dict(n=sp.n, m=sp.m, bits=4, gamma=gamma, norm_group=16,
+              act="silu", w2_data=sw2.data, w2_scale=sw2.scale,
+              w2_idx=sw2.idx, bias=bias, residual=res)
+    want = ref.sparse_fused_matmul_ref(x, sw.data, sw.scale, sw.idx, **kw)
+    got = sm.sparse_fused_matmul(x, sw.data, sw.scale, sw.idx,
+                                 bm=M, bk=16, interpret=True, **kw)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("sp", SPECS[:2], ids=lambda s: s.granularity)
+def test_sparse_fused_int_accum_bit_exact(rng, sp):
+    M, N, K = 8, 32, 16
+    w, sw, _ = _sw(rng, N, K, sp)
+    w2, sw2, _ = _sw(rng, N, K, sp)
+    xq = jnp.asarray(rng.integers(-8, 8, size=(M, N)), jnp.int8)
+    xs = jnp.asarray(rng.uniform(0.5, 2.0, size=(M, 1)), jnp.float32)
+    bias = jnp.asarray(rng.standard_normal((K,)), jnp.float32)
+    kw = dict(n=sp.n, m=sp.m, bits=4, x_scale=xs, act="silu",
+              w2_data=sw2.data, w2_scale=sw2.scale, w2_idx=sw2.idx,
+              bias=bias, accum="int32")
+    got = sm.sparse_fused_matmul(xq, sw.data, sw.scale, sw.idx,
+                                 bm=M, bk=K, interpret=True, **kw)
+    want = jax.jit(lambda: ref.sparse_fused_matmul_ref(
+        xq, sw.data, sw.scale, sw.idx, **kw))()
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def test_sparse_fused_int_accum_rejects_gamma(rng):
+    sp = SparsityConfig(2, 4, "col")
+    w, sw, _ = _sw(rng, 32, 16, sp)
+    x = jnp.asarray(rng.integers(-8, 8, size=(8, 32)), jnp.int8)
+    g = jnp.ones((32,), jnp.float32)
+    with pytest.raises(ValueError):
+        ref.sparse_fused_matmul_ref(x, sw.data, sw.scale, sw.idx,
+                                    n=2, m=4, gamma=g, accum="int32")
+    with pytest.raises(ValueError):
+        sm.sparse_fused_matmul(x, sw.data, sw.scale, sw.idx, n=2, m=4,
+                               gamma=g, accum="int32", bm=8, bk=16,
+                               interpret=True)
+
+
+@pytest.mark.parametrize("sp", SPECS[:2], ids=lambda s: s.granularity)
+@pytest.mark.parametrize("rcw", [True, False])
+def test_sparse_rcw_matches_ref(rng, sp, rcw):
+    M, N, K = 16, 32, 48
+    w, sw, qw = _sw(rng, N, K, sp)
+    x = jnp.asarray(rng.standard_normal((M, N)), jnp.float32)
+    want = ref.ws_ocs_matmul_ref(x, qw.data, qw.scale, bits=4)
+    got = sm.sparse_rcw_matmul(x, sw.data, sw.scale, sw.idx, n=sp.n,
+                               m=sp.m, bits=4, bm=M, bk=16, rcw=rcw,
+                               interpret=True)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("fn", ["ws", "fused", "rcw"])
+def test_sparse_untileable_error_reports_shapes(rng, fn):
+    sp = SparsityConfig(2, 4, "col")
+    w, sw, _ = _sw(rng, 32, 48, sp)
+    x = jnp.asarray(rng.standard_normal((10, 32)), jnp.float32)
+    call = {
+        "ws": lambda: sm.sparse_ws_ocs_matmul(
+            x, sw.data, sw.scale, sw.idx, n=2, m=4, bm=4, bk=48,
+            interpret=True),
+        "fused": lambda: sm.sparse_fused_matmul(
+            x, sw.data, sw.scale, sw.idx, n=2, m=4, bm=4, bk=48,
+            interpret=True),
+        "rcw": lambda: sm.sparse_rcw_matmul(
+            x, sw.data, sw.scale, sw.idx, n=2, m=4, bm=4, bk=48,
+            interpret=True),
+    }[fn]
+    with pytest.raises(ValueError) as ei:
+        call()
+    msg = str(ei.value)
+    assert "(10, 32)" in msg and "bm=" in msg and "bk=" in msg, msg
+
+
+# ---------------------------------------------------------------------------
+# params walk + serving equivalence
+# ---------------------------------------------------------------------------
+
+def test_quantize_params_walk_sparse_leaves():
+    cfg = get_config("llama2-7b", smoke=True).replace(
+        dtype=jnp.float32, quant_mode="w4a8", sparsity="2:4")
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    qp = quantize_params(params, cfg)
+    keys = set()
+
+    def walk(node):
+        if isinstance(node, dict):
+            if "q" in node and "scale" in node:
+                keys.update(k for k in node if k.startswith("sp"))
+            for v in node.values():
+                walk(v)
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                walk(v)
+    walk(qp)
+    assert keys == {"sp2of4"}, keys
+    # 3-D stacked (scanned) leaves carry a leading layer axis
+    found3d = []
+
+    def walk3(node, path=""):
+        if isinstance(node, dict):
+            if "sp2of4" in node and hasattr(node["sp2of4"], "ndim"):
+                found3d.append(node["sp2of4"].ndim)
+            for k, v in node.items():
+                walk3(v, path + "/" + str(k))
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                walk3(v, path)
+    walk3(qp)
+    assert 3 in found3d      # scanned col metadata: (layers, N//8, K)
+
+
+def test_bf16_and_dense_params_unchanged():
+    cfg = get_config("llama2-7b", smoke=True).replace(
+        dtype=jnp.float32, sparsity="2:4")       # quant_mode=bf16
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    assert quantize_params(params, cfg) is params
+    assert prune_params(params, cfg) is params
+    dense_cfg = cfg.replace(quant_mode="w4a8", sparsity="")
+    assert prune_params(params, dense_cfg) is params
+
+
+@pytest.mark.parametrize("arch", ["llama2-7b", "dbrx-132b", "qwen2-vl-2b"])
+@pytest.mark.parametrize("spec", ["2:4", "2:4:row"])
+def test_engine_token_identity_sparse_vs_dense_masked(rng, arch, spec):
+    """The acceptance contract: a sparse checkpoint serves token-
+    identically to quantizing the dense-masked weights."""
+    cfg = get_config(arch, smoke=True).replace(dtype=jnp.float32,
+                                               quant_mode="w4a8")
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    scfg = cfg.replace(sparsity=spec)
+    sp_params = quantize_params(params, scfg)
+    dm_params = quantize_params(prune_params(params, scfg), cfg)
+    toks = (np.arange(8, dtype=np.int32).reshape(2, 4) % cfg.vocab_size)
+    extra = None
+    if cfg.family == "vlm":
+        extra = {"vision_embeds": np.zeros(
+            (2, cfg.vision_patches, cfg.d_model), np.float32)}
+    o1 = Engine(scfg, sp_params, max_len=64).generate(
+        toks, ServeConfig(max_new_tokens=6), extra_batch=extra)
+    o2 = Engine(cfg, dm_params, max_len=64).generate(
+        toks, ServeConfig(max_new_tokens=6), extra_batch=extra)
+    assert np.array_equal(o1, o2)
+
+
+@pytest.mark.parametrize("arch,extra_cfg", [
+    ("llama2-7b", {}),
+    ("dbrx-132b", {"capacity_factor": 8.0}),
+    ("qwen2-vl-2b", {}),
+])
+def test_paged_scheduler_token_identity_sparse(rng, arch, extra_cfg):
+    """2:4-sparse vs dense-masked through the paged Scheduler (chunked
+    prefill + paged decode) on dense / MoE / VLM."""
+    from repro.serve.batching import Request
+    from repro.serve.paged import Scheduler
+
+    cfg = get_config(arch, smoke=True).replace(
+        dtype=jnp.float32, quant_mode="w4a8", **extra_cfg)
+    params = api.init(jax.random.PRNGKey(1), cfg)
+    scfg = cfg.replace(sparsity="2:4")
+    sp_params = quantize_params(params, scfg)
+    dm_params = quantize_params(prune_params(params, scfg), cfg)
+    prompts = [rng.integers(1, cfg.vocab_size, size=n).tolist()
+               for n in (6, 13, 9)]
+
+    def run(c, p):
+        sch = Scheduler(c, p, slots=2, max_len=64, block_size=8, chunk=8)
+        for i, pr in enumerate(prompts):
+            sch.submit(Request(rid=i, prompt=pr, max_new=5))
+        return sch.run()
+
+    assert run(scfg, sp_params) == run(cfg, dm_params)
+
+
+def test_fused_epilogue_token_identity_sparse():
+    cfg = get_config("llama2-7b", smoke=True).replace(
+        dtype=jnp.float32, quant_mode="w4a8", fuse_epilogue=True)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    toks = (np.arange(8, dtype=np.int32).reshape(2, 4) % cfg.vocab_size)
+    for spec in ("2:4", "2:4:row"):
+        scfg = cfg.replace(sparsity=spec)
+        o1 = Engine(scfg, quantize_params(params, scfg), max_len=64) \
+            .generate(toks, ServeConfig(max_new_tokens=6))
+        o2 = Engine(cfg, quantize_params(prune_params(params, scfg), cfg),
+                    max_len=64).generate(toks, ServeConfig(max_new_tokens=6))
+        assert np.array_equal(o1, o2), spec
+
+
+def test_sparseskip_dispatch_close(rng, monkeypatch):
+    """REPRO_OPT_SPARSESKIP=1 switches the off-TPU row-granular lowering
+    to the compressed-skip reference; logits must stay numerically close
+    to the dense-mask reconstruction (same nonzero products, different
+    summation order — platform round-off only)."""
+    monkeypatch.setenv("REPRO_OPT_SPARSESKIP", "1")
+    cfg = get_config("llama2-7b", smoke=True).replace(
+        dtype=jnp.float32, quant_mode="w4a8")
+    scfg = cfg.replace(sparsity="2:4:row")
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    sp_params = quantize_params(params, scfg)
+    dm_params = quantize_params(prune_params(params, scfg), cfg)
+    toks = jnp.arange(8, dtype=jnp.int32).reshape(2, 4) % cfg.vocab_size
+    batch = {"tokens": toks}
+    l1, _ = api.prefill_step(sp_params, scfg, batch,
+                             api.init_cache(scfg, 2, 16))
+    l2, _ = api.prefill_step(dm_params, cfg, batch,
+                             api.init_cache(cfg, 2, 16))
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# perf model rows
+# ---------------------------------------------------------------------------
+
+def test_perf_model_sparsity_rows():
+    from repro.sim import perf_model as pm
+    f_col = pm.sparse_weight_factor(2, 4, "col", bits=4)
+    assert abs(f_col - 0.75) < 1e-9          # 3 bits/elem vs 4
+    f_row = pm.sparse_weight_factor(2, 4, "row", bits=4)
+    assert 0.5 < f_row < 0.51                # index overhead ≈ negligible
+    for gran in ("col", "row"):
+        r = pm.sparsity_report(2, 4, gran)
+        assert r["decode_speedup"] > 1.0
+        assert r["prefill_speedup"] > 1.0
+        assert 0.0 < r["update_reduction"] < 1.0
+        assert r["sparse_prefill_dram_mb"] < r["dense_prefill_dram_mb"]
+    # denser spec → smaller saving
+    assert pm.sparsity_report(3, 4, "col")["decode_speedup"] \
+        < pm.sparsity_report(1, 4, "col")["decode_speedup"]
