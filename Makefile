@@ -4,7 +4,7 @@
 PY ?= python
 
 .PHONY: test test-multidevice bench bench-fast bench-prefill bench-spec \
-	bench-shard bench-sparse bench-report
+	bench-shard bench-sparse bench-obs bench-report
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q --durations=10
@@ -36,6 +36,12 @@ bench-shard:
 bench-sparse:
 	PYTHONPATH=src:benchmarks $(PY) -c "import run; \
 	  run.run_benches([run.bench_sparse]); run.write_json(run.PR9_JSON)"
+
+# PR 10 serving-telemetry rows only (overhead gate, export validity,
+# drift report), written to the canonical BENCH_pr10.json
+bench-obs:
+	PYTHONPATH=src:benchmarks $(PY) -c "import run; \
+	  run.run_benches([run.bench_obs]); run.write_json(run.PR10_JSON)"
 
 # multi-device test leg: paged sharding + token-identity sweep on an
 # 8-way host mesh (the paged suite re-runs under the same mesh)

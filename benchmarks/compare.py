@@ -38,6 +38,7 @@ HEADLINE_KEYS = (
     "accepted_frac", "peak_kv_blocks", "ratio", "flat_in_k",
     "tokens_identical", "scaling_1to4", "amortized_tok_s",
     "per_device_peak_blocks", "bound_ok", "scaling_vs_1dev",
+    "overhead_pct", "drift_pct", "tokens_match",
 )
 
 

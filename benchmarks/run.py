@@ -53,6 +53,10 @@ PR8_JSON = Path(os.environ.get(
 PR9_JSON = Path(os.environ.get(
     "REPRO_BENCH_PR9_JSON",
     Path(__file__).resolve().parent.parent / "BENCH_pr9.json"))
+# PR 10 rows (serving telemetry: overhead, export validity, drift) likewise
+PR10_JSON = Path(os.environ.get(
+    "REPRO_BENCH_PR10_JSON",
+    Path(__file__).resolve().parent.parent / "BENCH_pr10.json"))
 _ROWS = []
 
 
@@ -844,10 +848,123 @@ def bench_sparse() -> None:
              f"dense_tok_s={r['dense_tokens_per_s']:.1f}")
 
 
+def bench_obs() -> None:
+    """PR 10 rows (BENCH_pr10.json): serving telemetry (DESIGN.md §15).
+
+    * ``obs_sched_off`` / ``obs_sched_on`` — the same skewed workload
+      through the paged Scheduler with telemetry hard-off (the disabled
+      no-op instruments) vs fully on (tracing + metrics). One scheduler
+      per arm: warm run compiles, min-of-3 timed repeats measure. The
+      acceptance gate: tracing every span of every request costs ≤5 %
+      scheduler tok/s.
+    * ``obs_trace_valid`` — the on-arm's Chrome-trace export must
+      validate (proper nesting per lane, no orphan spans, one complete
+      admit→finish lifecycle per request) and leave zero open spans.
+    * ``obs_tokens_reconcile`` — ``tokens_emitted_total`` (and the
+      Prometheus text round-trip of it) must EXACTLY equal the token
+      count the scheduler returned, warmup included.
+    * ``obs_census_decode`` — per-family dispatch counts from the §15
+      unified ``Engine.dispatch_census``, folded into the export.
+    * ``obs_drift_*`` — modeled-vs-measured report rows (decode/prefill
+      s/token after platform-scale calibration)."""
+    from repro import obs
+    from repro.configs import get_config
+    from repro.models import api
+    from repro.serve.batching import Request
+    from repro.serve.engine import Engine, quantize_params
+    from repro.serve.paged import Scheduler
+
+    cfg = get_config("llama2-7b", smoke=True).replace(
+        dtype=jnp.float32, quant_mode="w4a8", num_layers=2, d_model=64,
+        num_heads=2, num_kv_heads=2, d_ff=128, vocab_size=256)
+    params = quantize_params(api.init(jax.random.PRNGKey(0), cfg), cfg)
+    rngp = np.random.default_rng(2)
+    reqs = [rngp.integers(1, cfg.vocab_size, size=ln).tolist()
+            for ln in (8, 24, 16, 40, 8, 32)]
+    new, max_len, bs, chunk = 16, 128, 16, 16
+
+    def build(trace, metrics):
+        sch = Scheduler(cfg, params, slots=4, max_len=max_len,
+                        block_size=bs, chunk=chunk, trace=trace,
+                        metrics=metrics)
+        rid = [0]
+
+        def go():
+            for pr in reqs:
+                sch.submit(Request(rid=rid[0], prompt=pr, max_new=new))
+                rid[0] += 1
+            t0 = time.perf_counter()
+            sch.run()
+            return time.perf_counter() - t0
+
+        return sch, go
+
+    sch_off, go_off = build(obs.Tracer(enabled=False),
+                            obs.Metrics(enabled=False))
+    trace, metrics = obs.Tracer(enabled=True), obs.Metrics(enabled=True)
+    sch_on, go_on = build(trace, metrics)
+    go_off()
+    go_on()                                    # compile + cache warmup
+    # paired, interleaved repeats: machine-load drift (this bench runs
+    # last in the smoke suite) hits both arms alike, and min-of-N picks
+    # each arm's cleanest run
+    ts_off, ts_on = [], []
+    for _ in range(5):
+        ts_off.append(go_off())
+        ts_on.append(go_on())
+    t_off, t_on = min(ts_off), min(ts_on)
+    toks = len(reqs) * new
+    overhead = (t_on - t_off) / t_off * 100.0
+    _row("obs_sched_off", t_off * 1e6, f"tok_s={toks / t_off:.1f}")
+    _row("obs_sched_on", t_on * 1e6,
+         f"tok_s={toks / t_on:.1f};overhead_pct={overhead:.2f};"
+         f"target=5.0;met={overhead <= 5.0}")
+    assert overhead <= 5.0, \
+        f"telemetry overhead {overhead:.2f}% exceeds the 5% budget"
+
+    # -- export validity + lifecycle completeness ----------------------
+    doc = trace.export_chrome()
+    counts = obs.validate_chrome_trace(doc)
+    lives = obs.request_lifecycles(doc)
+    _row("obs_trace_valid", 0.0,
+         f"spans={counts['spans']};events={counts['events']};"
+         f"lanes={counts['lanes']};lifecycles={len(lives)};"
+         f"open_spans={trace.open_count};valid=True")
+    assert trace.open_count == 0 and len(lives) == len(sch_on.done)
+
+    # -- exact token reconciliation (incl. the Prometheus round-trip) --
+    emitted = metrics.counter("tokens_emitted_total").value
+    sched_toks = sum(len(v) for v in sch_on.done.values())
+    samples = obs.parse_prometheus(metrics.export_prometheus())
+    prom = samples["repro_tokens_emitted_total"]
+    exact = emitted == sched_toks == prom
+    _row("obs_tokens_reconcile", 0.0,
+         f"metric={emitted:.0f};scheduler={sched_toks};prom={prom:.0f};"
+         f"tokens_match={exact}")
+    assert exact, (emitted, sched_toks, prom)
+
+    # -- per-family dispatch census, folded into the export ------------
+    eng = Engine(cfg, params, max_len=max_len)
+    census = eng.dispatch_census("decode")
+    obs.fold_census(metrics, census, "decode")
+    _row("obs_census_decode", 0.0,
+         f"total={census['total']};pallas_calls={census['pallas_call']};"
+         f"dot_general={census['dot_general']}")
+
+    # -- modeled-vs-measured drift -------------------------------------
+    for r in obs.drift_report(metrics, chunk=chunk, ctx=max_len,
+                              params=params):
+        kap = f"{r['kappa']:.3g}" if r["kappa"] is not None else "none"
+        _row(f"obs_drift_{r['name'].split()[0].strip('-')}", 0.0,
+             f"measured={r['measured']:.3e};modeled={r['modeled']:.3e};"
+             f"unit={r['unit']};drift_pct={r['drift_pct']:.1f};"
+             f"kappa={kap}")
+
+
 ALL_BENCHES = [bench_table1, bench_fig8, bench_fig9, bench_table2,
                bench_kernels, bench_fused, bench_decode_dispatch,
                bench_paged, bench_prefill, bench_spec, bench_shard,
-               bench_sparse]
+               bench_sparse, bench_obs]
 
 
 def run_benches(benches, keep_going: bool = False):
@@ -876,7 +993,8 @@ def write_json(target=None) -> Path:
                                  ("prefill_", "pr6", PR6_JSON),
                                  ("spec_", "pr7", PR7_JSON),
                                  ("shard_", "pr8", PR8_JSON),
-                                 ("sparse_", "pr9", PR9_JSON)):
+                                 ("sparse_", "pr9", PR9_JSON),
+                                 ("obs_", "pr10", PR10_JSON)):
         rows = [r for r in _ROWS if r["name"].startswith(prefix)]
         if not rows or target == default:   # already the canonical artifact
             continue

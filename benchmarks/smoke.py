@@ -9,8 +9,9 @@ Usage: PYTHONPATH=src python benchmarks/smoke.py [--fast]
           kernelization rows (BENCH_pr6.fast.json), the PR 7
           speculative-decoding rows (BENCH_pr7.fast.json), the PR 8
           multi-device sharded-serving rows (BENCH_pr8.fast.json — the
-          8-device arms run in a subprocess, see bench_shard), and the
-          PR 9 structured-sparsity rows (BENCH_pr9.fast.json)
+          8-device arms run in a subprocess, see bench_shard), the
+          PR 9 structured-sparsity rows (BENCH_pr9.fast.json), and the
+          PR 10 serving-telemetry rows (BENCH_pr10.fast.json)
 """
 from __future__ import annotations
 
@@ -24,7 +25,7 @@ def main(argv) -> int:
     fast = "--fast" in argv
     benches = [run.bench_fused, run.bench_decode_dispatch,
                run.bench_paged, run.bench_prefill, run.bench_spec,
-               run.bench_shard, run.bench_sparse] if fast \
+               run.bench_shard, run.bench_sparse, run.bench_obs] if fast \
         else run.ALL_BENCHES
     # fast mode must not clobber the full-row artifact (unless the
     # caller redirected the output explicitly)

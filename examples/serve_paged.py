@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs import get_config
 from repro.models import api
 from repro.serve.batching import ContinuousBatcher, Request
@@ -49,11 +50,14 @@ def main():
     dense_out = cb.run()
     t_dense = time.perf_counter() - t0
 
-    # half the dense block budget — prefix sharing + paging absorb it
+    # half the dense block budget — prefix sharing + paging absorb it;
+    # the paged run carries live telemetry (DESIGN.md §15)
     nbmax = max_len // args.block_size
+    metrics = obs.Metrics(enabled=True)
     sch = Scheduler(cfg, params, slots=args.slots, max_len=max_len,
                     block_size=args.block_size, chunk=args.chunk,
-                    num_blocks=args.slots * nbmax // 2 + 2)
+                    num_blocks=args.slots * nbmax // 2 + 2,
+                    metrics=metrics)
     for r in reqs:
         sch.submit(r)
     t0 = time.perf_counter()
@@ -77,6 +81,14 @@ def main():
           f"{amort['mean_active']:.2f} -> modeled "
           f"{amort['speedup_vs_b1']:.2f}x over batch-1 decode")
     print("token-for-token agreement dense vs paged:", agree)
+
+    ttft = metrics.get("ttft_seconds")
+    itl = metrics.get("inter_token_seconds")
+    print(f"telemetry: ttft {ttft.mean*1e3:.1f}ms mean over {ttft.count} "
+          f"requests, inter-token {itl.mean*1e3:.2f}ms, "
+          f"prefix hit rate {sch.pool.prefix_hit_rate:.0%}, "
+          f"emitted {metrics.counter('tokens_emitted_total').value:.0f} "
+          f"tokens (paged count: {toks})")
 
 
 if __name__ == "__main__":

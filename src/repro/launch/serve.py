@@ -30,6 +30,7 @@ from repro.serve.engine import Engine, ServeConfig, quantize_params
 
 
 def _run_paged(cfg, params, args) -> None:
+    from repro import obs
     from repro.launch.mesh import make_serving_mesh
     from repro.serve.batching import Request
     from repro.serve.paged import DisaggScheduler, Scheduler
@@ -41,7 +42,13 @@ def _run_paged(cfg, params, args) -> None:
     sm = make_serving_mesh(data=data, prefill_data=args.prefill_data) \
         if n_dev > 1 else None
     mesh = sm.mesh if sm is not None else None
-    kw = dict(slots=args.slots, max_len=max_len)
+    # --trace-out/--metrics-out force telemetry on for this run; without
+    # them the schedulers fall back to the env-gated defaults
+    # (REPRO_TRACE/REPRO_METRICS), off = zero-cost no-ops (§15)
+    trace = obs.Tracer(enabled=True) if args.trace_out else None
+    metrics = obs.Metrics(enabled=True) if args.metrics_out else None
+    kw = dict(slots=args.slots, max_len=max_len, trace=trace,
+              metrics=metrics)
     extra = {} if args.num_blocks is None else \
         {"num_blocks": args.num_blocks}
     if sm is not None and sm.disaggregated:
@@ -71,6 +78,28 @@ def _run_paged(cfg, params, args) -> None:
           f"({stats.per_device_peak_blocks():.1f}/device)")
     print("first output:", out[0])
 
+    tr = trace if trace is not None else stats.trace
+    mt = metrics if metrics is not None else stats.metrics
+    if tr.enabled and args.trace_out:
+        doc = tr.export_chrome(args.trace_out)
+        counts = obs.validate_chrome_trace(doc)
+        print(f"trace: {counts['spans']} spans / {counts['events']} "
+              f"events ({counts['lanes']} lanes) -> {args.trace_out}")
+    if mt.enabled:
+        if args.census:
+            # fold per-phase kernel-dispatch counts (jaxpr tracing costs
+            # seconds — opt-in) so the export carries dispatch shape
+            # next to the timing histograms
+            eng = Engine(cfg, params, max_len=max_len)
+            for phase in ("decode", "prefill"):
+                obs.fold_census(mt, eng.dispatch_census(phase), phase)
+        print(mt.summary())
+        print(obs.format_report(obs.drift_report(
+            mt, chunk=32, ctx=max_len, params=params)))
+        if args.metrics_out:
+            mt.export_prometheus(args.metrics_out)
+            print(f"metrics -> {args.metrics_out}")
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -89,6 +118,13 @@ def main() -> None:
                     help="devices carved into a disaggregated prefill pool")
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--num-blocks", type=int, default=None)
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome-trace JSON of the paged run here")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write Prometheus-text metrics of the paged run here")
+    ap.add_argument("--census", action="store_true",
+                    help="fold per-phase kernel-dispatch counts into the "
+                         "metrics export (traces jaxprs; costs seconds)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)

@@ -1,0 +1,59 @@
+"""Serving telemetry (DESIGN.md §15): request-lifecycle tracing
+(``obs.trace``), tok/s & latency metrics (``obs.metrics``), unified
+dispatch accounting (``obs.census``), and the modeled-vs-measured drift
+report (``obs.drift``).
+
+Environment gates (flag table in ``parallel/flags.py``):
+
+* ``REPRO_TRACE=1``   → the default Tracer records (else every call is
+  a no-op after one attribute check)
+* ``REPRO_METRICS=1`` → the default Metrics registry records (else all
+  instruments are shared nulls)
+
+The serving stack takes ``trace=``/``metrics=`` arguments everywhere;
+``None`` means "use the env-gated defaults below". Tests and benchmarks
+pass their own enabled instances so runs never share state through the
+process-global singletons.
+"""
+from __future__ import annotations
+
+import os
+
+from repro.obs.census import (DEFAULT_PRIMITIVES, census_jaxpr, count_eqns,
+                              dispatch_census, fold_census)
+from repro.obs.drift import drift_report, format_report, \
+    measured_weight_factor
+from repro.obs.metrics import Counter, Gauge, Histogram, Metrics, \
+    parse_prometheus
+from repro.obs.trace import (SCHED_TID, Tracer, request_lifecycles,
+                             request_tid, validate_chrome_trace)
+
+__all__ = [
+    "Tracer", "Metrics", "Counter", "Gauge", "Histogram",
+    "SCHED_TID", "request_tid", "validate_chrome_trace",
+    "request_lifecycles", "parse_prometheus",
+    "count_eqns", "census_jaxpr", "dispatch_census", "fold_census",
+    "DEFAULT_PRIMITIVES",
+    "drift_report", "format_report", "measured_weight_factor",
+    "default_tracer", "default_metrics",
+]
+
+_tracer = None
+_metrics = None
+
+
+def default_tracer() -> Tracer:
+    """Process-wide tracer, enabled iff ``REPRO_TRACE=1`` at first use."""
+    global _tracer
+    if _tracer is None:
+        _tracer = Tracer(enabled=os.environ.get("REPRO_TRACE") == "1")
+    return _tracer
+
+
+def default_metrics() -> Metrics:
+    """Process-wide registry, enabled iff ``REPRO_METRICS=1`` at first
+    use."""
+    global _metrics
+    if _metrics is None:
+        _metrics = Metrics(enabled=os.environ.get("REPRO_METRICS") == "1")
+    return _metrics

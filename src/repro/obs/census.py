@@ -1,0 +1,87 @@
+"""Dispatch accounting: one jaxpr-walking implementation for the whole
+tree (DESIGN.md §15, unifying the PR 3/6/7 ad-hoc counters).
+
+``serve/engine.py`` used to carry the jaxpr walk privately and expose it
+three times over (``decode_eqn_count`` / ``prefill_eqn_count`` /
+``verify_eqn_count``). The walk now lives here; the Engine methods are
+thin shape-caching wrappers and any code can census an arbitrary jitted
+callable with ``dispatch_census(fn, *args)``.
+
+Counting semantics (unchanged from the original): descend into
+control-flow bodies (scan / cond / pjit / remat — counted once, as
+dispatch *shape*, not trip count) but treat a ``pallas_call`` as ONE
+dispatch — its inner jaxpr is the kernel body, already fused on-chip.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Optional
+
+import jax
+
+# primitives broken out by every census unless told otherwise: total op
+# dispatches, kernel launches, and the matmuls that escaped the kernel
+# family (the DESIGN.md §11 kernel-residency metric)
+DEFAULT_PRIMITIVES = (None, "pallas_call", "dot_general")
+
+
+def _subjaxprs(v):
+    vals = v if isinstance(v, (list, tuple)) else [v]
+    for u in vals:
+        if hasattr(u, "jaxpr"):          # ClosedJaxpr
+            yield u.jaxpr
+        elif hasattr(u, "eqns"):         # raw Jaxpr
+            yield u
+
+
+def count_eqns(jaxpr, primitive: Optional[str] = None) -> int:
+    """Equations in a jaxpr, descending into control-flow bodies but
+    treating a ``pallas_call`` as one dispatch. With ``primitive`` set,
+    count only equations of that primitive (e.g. "pallas_call" → kernel
+    launches)."""
+    n = 0
+    for eqn in jaxpr.eqns:
+        if primitive is None or eqn.primitive.name == primitive:
+            n += 1
+        if eqn.primitive.name == "pallas_call":
+            continue
+        for v in eqn.params.values():
+            for sub in _subjaxprs(v):
+                n += count_eqns(sub, primitive)
+    return n
+
+
+def census_jaxpr(jaxpr, primitives: Iterable[Optional[str]]
+                 = DEFAULT_PRIMITIVES) -> Dict[str, int]:
+    """Census an already-traced jaxpr (ClosedJaxpr or raw): primitive
+    name → dispatch count, with key "total" for the all-primitives
+    count (``primitive=None``)."""
+    if hasattr(jaxpr, "jaxpr"):
+        jaxpr = jaxpr.jaxpr
+    return {("total" if p is None else p): count_eqns(jaxpr, p)
+            for p in primitives}
+
+
+def dispatch_census(fn, *args,
+                    primitives: Iterable[Optional[str]]
+                    = DEFAULT_PRIMITIVES, **kwargs) -> Dict[str, int]:
+    """Trace ``fn(*args, **kwargs)`` and census its dispatch schedule.
+
+    The unified front door the ISSUE-10 satellite asks for: any jitted
+    step — decode, prefill chunk, verify pass, or an arbitrary model
+    function — yields a {primitive: count} dict through one call.
+    Tracing is the expensive part (seconds for a scanned model); callers
+    that census repeatedly at fixed shapes should trace once with
+    ``jax.make_jaxpr`` and use ``census_jaxpr``, which is what
+    ``Engine.*_eqn_count`` does via its per-shape caches."""
+    return census_jaxpr(jax.make_jaxpr(fn)(*args, **kwargs), primitives)
+
+
+def fold_census(metrics, census: Dict[str, int], phase: str) -> None:
+    """Record a census into a Metrics registry as
+    ``kernel_dispatches{phase=...,primitive=...}`` gauges — the
+    scheduler folds one census per phase (decode / prefill / verify) at
+    end of run so the Prometheus export carries the dispatch-shape
+    counts next to the timing histograms."""
+    for prim, n in census.items():
+        metrics.gauge("kernel_dispatches",
+                      {"phase": phase, "primitive": prim}).set(n)

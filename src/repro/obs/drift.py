@@ -1,0 +1,167 @@
+"""Modeled-vs-measured drift report (DESIGN.md §15).
+
+``sim/perf_model`` reproduces the paper's latency claims analytically
+for the RCW-CIM chip; the serving stack runs on whatever host/TPU this
+testbed has. Absolute times are therefore incomparable — what IS
+comparable is the *shape* of the model: how decode cost scales with
+occupancy, how prefill cost scales with tokens, what speculation and
+sparsity multiply. The drift report checks exactly that:
+
+* **Calibrated rows** (decode s/token, prefill s/token): a single scale
+  κ — the geometric mean of measured/modeled over the calibrated rows —
+  maps chip-modeled seconds onto testbed seconds. κ absorbs the
+  platform gap; the per-row drift percentages are the *residuals* after
+  calibration, so they are symmetric (decode +x% ⇔ prefill −x% for two
+  rows) and sum to ~0 in log space. A small residual means the model's
+  decode:prefill cost *ratio* matches the measured engine.
+* **Dimensionless rows** need no calibration and compare directly:
+  weight-stream amortization speedup (measured batched-vs-b1 tok/s
+  ratio vs ``speedup_vs_b1``), tokens per verify pass (measured
+  emitted/pass vs ``expected_tokens_per_pass`` at the realized
+  acceptance), and the sparse weight-stream factor (measured compressed
+  bytes on the wire vs ``sparse_weight_factor``).
+
+The report consumes a populated ``obs.Metrics`` registry (the scheduler
+fills ``decode_tick_seconds`` / ``prefill_chunk_seconds`` / ``tick_active``
+/ ``accepted_draft_length`` as it runs) plus optional measured extras,
+and prints/returns per-row drift percentages — the paper's Table-1/
+Fig-8 claims checked continuously against the live engine.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional
+
+from repro.core.dataflow import Dataflow
+from repro.sim import perf_model
+from repro.obs.metrics import Histogram, Metrics
+
+
+def measured_weight_factor(params) -> Optional[float]:
+    """Realized weight-stream compression from a quantized pytree:
+    (compressed value bytes + N:M metadata bytes) / dense value bytes,
+    over every sparse leaf. None if the tree has no sparse leaves —
+    mirrors ``perf_model.sparse_weight_factor`` from the measured side
+    (scales excluded from both numerator and denominator: the dense
+    baseline streams them too)."""
+    sparse = dense = 0.0
+
+    def walk(node):
+        nonlocal sparse, dense
+        if isinstance(node, dict):
+            sp_keys = [k for k in node if k.startswith("sp") and "of" in k]
+            if sp_keys and "q" in node:
+                n, m = map(int, sp_keys[0][2:].split("of"))
+                q, idx = node["q"], node[sp_keys[0]]
+                sparse += q.nbytes + idx.nbytes
+                dense += q.nbytes * m / n
+                return
+            for v in node.values():
+                walk(v)
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                walk(v)
+
+    walk(params)
+    return (sparse / dense) if dense else None
+
+
+def _mean(metrics: Metrics, name: str) -> float:
+    h = metrics.get(name)
+    return h.mean if isinstance(h, Histogram) else 0.0
+
+
+def _row(name, measured, modeled, unit, calibrated):
+    return {"name": name, "measured": measured, "modeled": modeled,
+            "unit": unit, "calibrated": calibrated, "drift_pct": None}
+
+
+def drift_report(metrics: Metrics, *, chunk: int = 32, ctx: int = 1024,
+                 k: Optional[int] = None,
+                 accept_rate: Optional[float] = None,
+                 params=None,
+                 b1_seconds_per_token: Optional[float] = None
+                 ) -> List[Dict]:
+    """Build the modeled-vs-measured rows from a populated registry.
+
+    ``chunk``/``ctx`` describe the run (prefill chunk tokens, modeled
+    context); ``k`` enables the tokens-per-pass row for a speculative
+    run (realized acceptance defaults to the measured mean accepted
+    length); ``params`` enables the sparse-factor row; and
+    ``b1_seconds_per_token`` (a measured batch-1 arm) enables the
+    amortization-speedup row. Rows with no measurement are skipped, so
+    the report degrades gracefully on partial runs."""
+    rows: List[Dict] = []
+
+    ticks = metrics.get("tick_active")
+    mean_active = ticks.mean if isinstance(ticks, Histogram) else 0.0
+    dec_s = _mean(metrics, "decode_tick_seconds")
+    if dec_s > 0 and mean_active >= 1:
+        meas = dec_s / mean_active                # seconds per token
+        modl = perf_model.amortized_decode_latency(mean_active, ctx=ctx)
+        rows.append(_row("decode s/token (amortized)", meas, modl,
+                         "s", True))
+
+    pre_s = _mean(metrics, "prefill_chunk_seconds")
+    if pre_s > 0:
+        meas = pre_s / chunk
+        modl = perf_model.prefill_latency(Dataflow.WS_OCS, chunk) / chunk
+        rows.append(_row("prefill s/token (chunked)", meas, modl,
+                         "s", True))
+
+    if b1_seconds_per_token and dec_s > 0 and mean_active >= 1:
+        meas = b1_seconds_per_token / (dec_s / mean_active)
+        modl = perf_model.decode_latency(rcw=True, fusion=True, ctx=ctx) \
+            / perf_model.amortized_decode_latency(mean_active, ctx=ctx)
+        rows.append(_row("weight-stream amortization ×", meas, modl,
+                         "x", False))
+
+    if k:
+        acc = metrics.get("accepted_draft_length")
+        if isinstance(acc, Histogram) and acc.count:
+            meas = acc.mean + 1.0            # emitted = accepted + bonus
+            alpha = accept_rate if accept_rate is not None \
+                else min(acc.mean / k, 1.0)
+            modl = perf_model.expected_tokens_per_pass(k, alpha)
+            rows.append(_row("tokens per verify pass", meas, modl,
+                             "tok", False))
+
+    if params is not None:
+        meas = measured_weight_factor(params)
+        if meas is not None:
+            modl = perf_model.sparse_weight_factor(2, 4, "col", bits=4)
+            rows.append(_row("sparse weight-stream factor", meas, modl,
+                             "frac", False))
+
+    # calibrate: κ = geometric mean of measured/modeled over the
+    # seconds-valued rows, then drift = residual after scaling
+    cal = [r for r in rows
+           if r["calibrated"] and r["measured"] > 0 and r["modeled"] > 0]
+    kappa = math.exp(sum(math.log(r["measured"] / r["modeled"])
+                         for r in cal) / len(cal)) if cal else 1.0
+    for r in rows:
+        scale = kappa if r["calibrated"] else 1.0
+        if r["modeled"]:
+            r["drift_pct"] = (r["measured"] / (scale * r["modeled"])
+                              - 1.0) * 100.0
+        r["kappa"] = kappa if r["calibrated"] else None
+    return rows
+
+
+def format_report(rows: List[Dict]) -> str:
+    """Human table: one modeled-vs-measured line per row with the drift
+    percentage (post-calibration for seconds rows)."""
+    if not rows:
+        return "(no drift rows — run with metrics enabled)"
+    kappa = next((r["kappa"] for r in rows if r.get("kappa")), None)
+    head = "modeled-vs-measured drift"
+    if kappa is not None:
+        head += f" (platform scale kappa={kappa:.3g})"
+    w = max(len(r["name"]) for r in rows)
+    lines = [head]
+    for r in rows:
+        lines.append(
+            f"  {r['name']:<{w}}  measured={r['measured']:.6g}"
+            f" modeled={r['modeled']:.6g} {r['unit']:<4}"
+            f" drift={r['drift_pct']:+.2f}%")
+    return "\n".join(lines)

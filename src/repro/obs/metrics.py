@@ -1,0 +1,234 @@
+"""Serving metrics: counters / gauges / histograms with a Prometheus
+text exporter and a human summary table (DESIGN.md §15).
+
+Same zero-cost-when-disabled contract as ``obs.trace``: a disabled
+``Metrics`` registry hands out shared null instruments whose methods are
+no-ops, so the scheduler hot loop calls ``metrics.counter(...)`` /
+``.observe(...)`` unconditionally. Enabled instruments are plain Python
+floats/lists behind a registry dict — no background threads, no
+dependencies.
+
+The serving stack populates (names as exported, ``repro_`` prefix added
+at export time):
+
+==============================  =========  ============================
+metric                          kind       source
+==============================  =========  ============================
+tokens_emitted_total            counter    Scheduler._emit (exact match
+                                           with returned sequences)
+requests_admitted/finished/
+preempted/replayed_total        counter    Scheduler lifecycle
+decode_ticks_total              counter    Scheduler._decode_tick
+prefill_chunks_total            counter    Scheduler._prefill_tick
+verify_passes_total             counter    Scheduler._spec_tick
+handoffs_total                  counter    DisaggScheduler
+ttft_seconds                    histogram  admit → first token
+inter_token_seconds             histogram  successive emits per request
+decode_tick_seconds             histogram  one batched decode step
+prefill_chunk_seconds           histogram  one chunked-prefill launch
+verify_pass_seconds             histogram  one draft+verify pass
+accepted_draft_length           histogram  tokens taken per verify pass
+tick_active                     histogram  active slots per decode tick
+prefix_cache_hit_rate           gauge      KVBlockPool (folded)
+cow_copies/evictions/
+preemptions_total               counter    KVBlockPool + Scheduler
+pool_fragmentation              gauge      KVBlockPool (folded)
+kernel_dispatches{phase=...}    gauge      obs.census fold-in
+==============================  =========  ============================
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Sequence
+
+# default histogram buckets (seconds) — spans µs-scale host work to
+# multi-second prefills; counts-style histograms pass explicit buckets
+_TIME_BUCKETS = (1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 0.1, 0.3, 1.0,
+                 3.0, 10.0)
+
+
+class _Null:
+    """Shared do-nothing instrument for a disabled registry."""
+    __slots__ = ()
+
+    def inc(self, v: float = 1.0) -> None: ...
+    def set(self, v: float) -> None: ...
+    def observe(self, v: float) -> None: ...
+
+
+_NULL = _Null()
+
+
+class Counter:
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def inc(self, v: float = 1.0) -> None:
+        self.value += v
+
+
+class Gauge:
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+    def inc(self, v: float = 1.0) -> None:
+        self.value += v
+
+
+class Histogram:
+    """Fixed-bucket histogram with exact sum/count (Prometheus
+    cumulative-bucket semantics at export)."""
+    __slots__ = ("buckets", "counts", "sum", "count")
+
+    def __init__(self, buckets: Sequence[float] = _TIME_BUCKETS):
+        self.buckets = tuple(buckets)
+        self.counts = [0] * (len(self.buckets) + 1)   # +1 → +Inf
+        self.sum = 0.0
+        self.count = 0
+
+    def observe(self, v: float) -> None:
+        self.sum += v
+        self.count += 1
+        for i, b in enumerate(self.buckets):
+            if v <= b:
+                self.counts[i] += 1
+                return
+        self.counts[-1] += 1
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else 0.0
+
+
+def _key(name: str, labels: Optional[Dict[str, str]]) -> str:
+    if not labels:
+        return name
+    lab = ",".join(f'{k}="{labels[k]}"' for k in sorted(labels))
+    return f"{name}{{{lab}}}"
+
+
+class Metrics:
+    """Instrument registry. ``counter/gauge/histogram`` get-or-create by
+    (name, labels); repeated calls return the same instrument, so call
+    sites need no caching (though hot loops may keep a local ref)."""
+
+    def __init__(self, enabled: bool = True):
+        self.enabled = enabled
+        self._reg: Dict[str, object] = {}
+        self._kind: Dict[str, str] = {}   # bare name → kind (for export)
+
+    def _get(self, name: str, labels, kind, factory):
+        if not self.enabled:
+            return _NULL
+        key = _key(name, labels)
+        inst = self._reg.get(key)
+        if inst is None:
+            inst = self._reg[key] = factory()
+            self._kind.setdefault(name, kind)
+        return inst
+
+    def counter(self, name: str, labels: Optional[Dict] = None) -> Counter:
+        return self._get(name, labels, "counter", Counter)
+
+    def gauge(self, name: str, labels: Optional[Dict] = None) -> Gauge:
+        return self._get(name, labels, "gauge", Gauge)
+
+    def histogram(self, name: str, labels: Optional[Dict] = None,
+                  buckets: Sequence[float] = _TIME_BUCKETS) -> Histogram:
+        return self._get(name, labels, "histogram",
+                         lambda: Histogram(buckets))
+
+    # -- reading ----------------------------------------------------------
+    def get(self, name: str, labels: Optional[Dict] = None):
+        """The live instrument, or None if never touched (useful in
+        tests; never allocates)."""
+        return self._reg.get(_key(name, labels))
+
+    def value(self, name: str, labels: Optional[Dict] = None) -> float:
+        inst = self.get(name, labels)
+        if inst is None:
+            return 0.0
+        return inst.sum if isinstance(inst, Histogram) else inst.value
+
+    def reset(self) -> None:
+        self._reg.clear()
+        self._kind.clear()
+
+    # -- export -----------------------------------------------------------
+    def export_prometheus(self, path=None, prefix: str = "repro_") -> str:
+        """Prometheus text exposition format v0.0.4. Counters export as
+        ``<prefix><name>`` (callers should already use ``_total``
+        suffixes), histograms as cumulative ``_bucket{le=...}`` plus
+        ``_sum``/``_count``."""
+        by_name: Dict[str, List] = {}
+        for key, inst in self._reg.items():
+            name, brace, lab = key.partition("{")
+            by_name.setdefault(name, []).append(
+                (lab[:-1] if brace else "", inst))
+        lines: List[str] = []
+        for name in sorted(by_name):
+            kind = self._kind.get(name, "gauge")
+            full = prefix + name
+            lines.append(f"# TYPE {full} {kind}")
+            for lab, inst in sorted(by_name[name]):
+                if isinstance(inst, Histogram):
+                    cum = 0
+                    for b, c in zip(inst.buckets, inst.counts):
+                        cum += c
+                        le = f'le="{b:g}"'
+                        sep = "," if lab else ""
+                        lines.append(
+                            f"{full}_bucket{{{lab}{sep}{le}}} {cum}")
+                    sep = "," if lab else ""
+                    lines.append(
+                        f'{full}_bucket{{{lab}{sep}le="+Inf"}} '
+                        f"{inst.count}")
+                    suffix = f"{{{lab}}}" if lab else ""
+                    lines.append(f"{full}_sum{suffix} {inst.sum:g}")
+                    lines.append(f"{full}_count{suffix} {inst.count}")
+                else:
+                    suffix = f"{{{lab}}}" if lab else ""
+                    lines.append(f"{full}{suffix} {inst.value:g}")
+        text = "\n".join(lines) + ("\n" if lines else "")
+        if path is not None:
+            with open(path, "w") as f:
+                f.write(text)
+        return text
+
+    def summary(self) -> str:
+        """Human-readable table: one row per instrument, histograms as
+        count/mean/max-bucket."""
+        rows = []
+        for key in sorted(self._reg):
+            inst = self._reg[key]
+            if isinstance(inst, Histogram):
+                rows.append((key, f"n={inst.count} mean={inst.mean:.6g} "
+                                  f"sum={inst.sum:.6g}"))
+            else:
+                rows.append((key, f"{inst.value:g}"))
+        if not rows:
+            return "(no metrics recorded)"
+        w = max(len(k) for k, _ in rows)
+        return "\n".join(f"{k:<{w}}  {v}" for k, v in rows)
+
+
+def parse_prometheus(text: str) -> Dict[str, float]:
+    """Inverse of ``export_prometheus`` for tests/benchmarks: sample
+    name (with labels, without prefix handling) → value. ``# TYPE``
+    lines are skipped; histogram series appear under their full
+    ``_bucket``/``_sum``/``_count`` names."""
+    out: Dict[str, float] = {}
+    for line in text.splitlines():
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        name, _, val = line.rpartition(" ")
+        out[name] = float(val)
+    return out

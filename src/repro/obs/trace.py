@@ -1,0 +1,296 @@
+"""Low-overhead span/event tracer for the serving stack (DESIGN.md §15).
+
+Zero-dependency request-lifecycle tracing: the paged scheduler (and the
+disaggregated / speculative paths riding on it) records *spans*
+(named intervals on the monotonic clock) and *instant events* into a
+thread-safe ring buffer, exported on demand as Chrome ``trace_event``
+JSON — loadable in ``chrome://tracing`` / Perfetto.
+
+Design rules (the §15 overhead budget):
+
+* **Disabled is free.** ``Tracer(enabled=False)`` — the default unless
+  ``REPRO_TRACE=1`` — short-circuits every call after one attribute
+  check; ``span()`` returns a shared ``nullcontext`` so no generator or
+  frame is created. The serving hot loop may therefore call the tracer
+  unconditionally.
+* **Enabled is cheap.** A span costs two ``time.perf_counter()`` reads
+  and one deque append; no string formatting, no I/O, no allocation
+  beyond the record tuple. Export is the only expensive operation and
+  happens outside the serving loop.
+* **Bounded memory.** Records land in a ``deque(maxlen=capacity)`` —
+  a long-running server overwrites its oldest spans instead of growing
+  without bound. Lifecycle *root* spans (begin/end across many ticks)
+  are tracked separately while open, so an open root is never evicted
+  mid-request.
+
+Span taxonomy (emitted by ``serve/paged/scheduler.py`` & co):
+
+=================  ====  ===============================================
+name               kind  meaning (tid)
+=================  ====  ===============================================
+request            root  admit → finish/preempt/handoff; one per
+                         admission, so a preempted-then-replayed request
+                         closes one root per attempt (tid = rid+1)
+prefill_chunk      span  one chunked-prefill launch for one slot
+                         (tid = rid+1)
+decode_tick        span  one batched decode step, args n_active (tid 0)
+verify_pass        span  one speculative draft+verify pass (tid 0)
+first_token        evt   prompt complete, first token emitted — the
+                         TTFT mark (tid = rid+1)
+rollback           evt   speculative rejection: accepted < k drafts
+                         (tid = rid+1)
+preempt            evt   request evicted mid-decode (tid = rid+1)
+finish             evt   request completed (tid = rid+1)
+handoff / adopt    evt   disaggregated prefill→decode block transfer
+                         (tid = rid+1)
+=================  ====  ===============================================
+
+tid 0 is the scheduler lane; request lanes are ``rid + 1`` so request 0
+never collides with the scheduler. Chrome renders each tid as its own
+track, so overlapping requests nest correctly without explicit
+parent/child links.
+"""
+from __future__ import annotations
+
+import contextlib
+import itertools
+import json
+import threading
+import time
+from collections import deque
+from typing import Dict, List, Optional
+
+SCHED_TID = 0
+
+# one shared nullcontext for every disabled span() call — entering a
+# nullcontext is reentrant-safe and stateless, so no per-call allocation
+_NULL_CTX = contextlib.nullcontext()
+
+
+def request_tid(rid: int) -> int:
+    """Trace lane for request ``rid`` (lane 0 is the scheduler's)."""
+    return rid + 1
+
+
+class _SpanCM:
+    """Tiny context manager recording one complete span on exit (no
+    @contextmanager generator — ~3× cheaper to enter/exit)."""
+
+    __slots__ = ("_tr", "_name", "_tid", "_args", "_t0")
+
+    def __init__(self, tr: "Tracer", name: str, tid: int, args):
+        self._tr, self._name, self._tid, self._args = tr, name, tid, args
+
+    def __enter__(self):
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self._tr._record(self._name, self._tid, self._t0,
+                         time.perf_counter(), self._args)
+        return False
+
+
+class Tracer:
+    """Span/event recorder over a thread-safe ring buffer.
+
+    Records are host-side tuples; jitted device work is *covered* by the
+    spans that launch it (a span closes after the host-visible sync of
+    its step), never instrumented inside. ``export_chrome`` serializes
+    everything recorded so far without draining the buffer."""
+
+    def __init__(self, enabled: bool = True, capacity: int = 1 << 16):
+        self.enabled = enabled
+        self.capacity = capacity
+        self._buf: deque = deque(maxlen=capacity)   # (name,tid,t0,t1,args)
+        self._events: deque = deque(maxlen=capacity)  # (name,tid,ts,args)
+        self._open: Dict[int, tuple] = {}
+        self._ids = itertools.count(1)
+        self._lock = threading.Lock()
+        self._t_epoch = time.perf_counter()
+
+    # -- recording --------------------------------------------------------
+    def _record(self, name, tid, t0, t1, args) -> None:
+        self._buf.append((name, tid, t0, t1, args))
+
+    def span(self, name: str, tid: int = SCHED_TID, **args):
+        """Context manager timing one interval; free when disabled."""
+        if not self.enabled:
+            return _NULL_CTX
+        return _SpanCM(self, name, tid, args or None)
+
+    def event(self, name: str, tid: int = SCHED_TID, **args) -> None:
+        """Instant event at now()."""
+        if not self.enabled:
+            return
+        self._events.append((name, tid, time.perf_counter(), args or None))
+
+    def begin(self, name: str, tid: int = SCHED_TID, **args) -> int:
+        """Open a long-lived root span (closed by ``end``); returns a
+        handle, or 0 when disabled (``end(0)`` is a no-op). Open roots
+        live outside the ring buffer so they cannot be evicted."""
+        if not self.enabled:
+            return 0
+        with self._lock:
+            h = next(self._ids)
+            self._open[h] = (name, tid, time.perf_counter(), dict(args))
+        return h
+
+    def end(self, handle: int, **args) -> None:
+        if not handle:
+            return
+        with self._lock:
+            name, tid, t0, a = self._open.pop(handle)
+        if args:
+            a.update(args)
+        self._record(name, tid, t0, time.perf_counter(), a or None)
+
+    # -- inspection -------------------------------------------------------
+    @property
+    def open_count(self) -> int:
+        """Roots begun but not ended — 0 after a drained run (the
+        no-orphan invariant tests assert)."""
+        return len(self._open)
+
+    def spans(self) -> List[Dict]:
+        return [{"name": n, "tid": t, "t0": a, "t1": b,
+                 "args": dict(g) if g else {}}
+                for n, t, a, b, g in list(self._buf)]
+
+    def events(self) -> List[Dict]:
+        return [{"name": n, "tid": t, "ts": s,
+                 "args": dict(g) if g else {}}
+                for n, t, s, g in list(self._events)]
+
+    def clear(self) -> None:
+        """Drop all closed records (open roots survive — a mid-request
+        clear must not orphan the request's eventual ``end``)."""
+        with self._lock:
+            self._buf.clear()
+            self._events.clear()
+            self._t_epoch = time.perf_counter()
+
+    def span_seconds(self, name: str) -> float:
+        """Total wall-clock covered by closed spans called ``name``."""
+        return sum(b - a for n, _, a, b, _ in list(self._buf) if n == name)
+
+    # -- export -----------------------------------------------------------
+    def _us(self, t: float) -> float:
+        return (t - self._t_epoch) * 1e6
+
+    def export_chrome(self, path=None, process_name: str = "repro-serve"
+                      ) -> Dict:
+        """Chrome ``trace_event`` JSON object format: complete ("X")
+        events for spans, instant ("i") events, plus metadata rows
+        naming the process and each tid lane. Returns the document;
+        writes it to ``path`` when given."""
+        ev: List[Dict] = [{
+            "ph": "M", "pid": 0, "tid": 0, "name": "process_name",
+            "args": {"name": process_name}}]
+        tids = set()
+        for n, tid, t0, t1, args in list(self._buf):
+            tids.add(tid)
+            ev.append({"ph": "X", "pid": 0, "tid": tid, "name": n,
+                       "cat": "serve", "ts": round(self._us(t0), 3),
+                       "dur": round((t1 - t0) * 1e6, 3),
+                       "args": dict(args) if args else {}})
+        for n, tid, ts, args in list(self._events):
+            tids.add(tid)
+            ev.append({"ph": "i", "pid": 0, "tid": tid, "name": n,
+                       "cat": "serve", "ts": round(self._us(ts), 3),
+                       "s": "t", "args": dict(args) if args else {}})
+        for tid in sorted(tids):
+            ev.append({"ph": "M", "pid": 0, "tid": tid,
+                       "name": "thread_name",
+                       "args": {"name": "scheduler" if tid == SCHED_TID
+                                else f"request {tid - 1}"}})
+        doc = {"traceEvents": ev, "displayTimeUnit": "ms"}
+        if path is not None:
+            with open(path, "w") as f:
+                json.dump(doc, f)
+        return doc
+
+
+def validate_chrome_trace(doc: Dict) -> Dict:
+    """Structural validation of an exported (or re-parsed) trace — the
+    BENCH/test reconciliation helper. Checks the ``trace_event``
+    contract: every record has a phase, X records carry ts+dur, and per
+    tid the X spans are non-overlapping with monotone start times (one
+    lane = one request's lifecycle = a clean span tree). Returns summary
+    counts; raises ``ValueError`` on a malformed stream."""
+    evs = doc.get("traceEvents")
+    if not isinstance(evs, list):
+        raise ValueError("no traceEvents list")
+    lanes: Dict[int, List] = {}
+    n_spans = n_events = 0
+    for e in evs:
+        ph = e.get("ph")
+        if ph not in ("X", "i", "M"):
+            raise ValueError(f"unknown phase {ph!r}")
+        if ph == "M":
+            continue
+        if not isinstance(e.get("ts"), (int, float)):
+            raise ValueError(f"event without ts: {e}")
+        if ph == "X":
+            if not isinstance(e.get("dur"), (int, float)) or e["dur"] < 0:
+                raise ValueError(f"X event without dur: {e}")
+            lanes.setdefault(e["tid"], []).append(
+                (e["ts"], e["ts"] + e["dur"], e["name"]))
+            n_spans += 1
+        else:
+            n_events += 1
+    eps = 1e-3                                   # µs round-off slack
+    for tid, spans in lanes.items():
+        # records land in COMPLETION order (a root closes after its
+        # children), so sort by start (ties: longest first) and check
+        # proper nesting: within a lane a span either nests inside the
+        # enclosing one or starts after it ends — partial overlap means
+        # the stream is malformed (an orphan crossing lifecycle roots)
+        spans.sort(key=lambda s: (s[0], s[0] - s[1]))
+        stack: List = []
+        for ts, te, name in spans:
+            while stack and ts >= stack[-1][1] - eps:
+                stack.pop()
+            if stack and te > stack[-1][1] + eps:
+                raise ValueError(
+                    f"tid {tid}: span {name!r} [{ts}, {te}] partially "
+                    f"overlaps enclosing {stack[-1][2]!r} "
+                    f"[{stack[-1][0]}, {stack[-1][1]}]")
+            stack.append((ts, te, name))
+    return {"spans": n_spans, "events": n_events, "lanes": len(lanes)}
+
+
+def request_lifecycles(doc: Dict) -> Dict[int, Dict]:
+    """Group an exported trace by request lane: rid → {roots, children,
+    events} where ``roots`` are the completed ``request`` spans (one per
+    admission — preemption replays append another) and every child
+    span/event is checked to fall inside some root's interval. Raises
+    ``ValueError`` on an orphan (a child outside every root)."""
+    out: Dict[int, Dict] = {}
+    eps = 1e-3                                   # µs round-off slack
+    for e in doc.get("traceEvents", []):
+        tid = e.get("tid", 0)
+        if e.get("ph") == "M" or tid == SCHED_TID:
+            continue
+        rid = tid - 1
+        rec = out.setdefault(rid, {"roots": [], "children": [],
+                                   "events": []})
+        if e["ph"] == "X" and e["name"] == "request":
+            rec["roots"].append(e)
+        elif e["ph"] == "X":
+            rec["children"].append(e)
+        else:
+            rec["events"].append(e)
+    for rid, rec in out.items():
+        if not rec["roots"]:
+            raise ValueError(f"request {rid}: no completed root span")
+        ivals = [(r["ts"] - eps, r["ts"] + r["dur"] + eps)
+                 for r in rec["roots"]]
+        for c in rec["children"] + rec["events"]:
+            t0 = c["ts"]
+            t1 = t0 + c.get("dur", 0.0)
+            if not any(a <= t0 and t1 <= b for a, b in ivals):
+                raise ValueError(
+                    f"request {rid}: orphan {c['name']!r} at {t0} "
+                    f"outside every root interval")
+    return out

@@ -72,6 +72,20 @@ REPRO_BENCH_PR8_JSON   unset    path override for the multi-device
 REPRO_BENCH_PR9_JSON   unset    path override for the structured-
                                 sparsity row artifact
                                 (benchmarks/run.py)
+REPRO_BENCH_PR10_JSON  unset    path override for the serving-telemetry
+                                row artifact (benchmarks/run.py)
+REPRO_TRACE            unset    1 = the process-default Tracer records
+                                request-lifecycle spans (Chrome-trace
+                                export, DESIGN.md §15); unset/0 = every
+                                tracing call is a zero-cost no-op.
+                                Explicit ``trace=`` arguments override
+                                the default (obs/__init__.py)
+REPRO_METRICS          unset    1 = the process-default Metrics
+                                registry records counters/histograms
+                                (Prometheus export, DESIGN.md §15);
+                                unset/0 = shared null instruments.
+                                Explicit ``metrics=`` arguments
+                                override the default (obs/__init__.py)
 =====================  =======  =========================================
 """
 import os

@@ -22,6 +22,10 @@ from repro.core.quant import (QuantConfig, SparsityConfig, nm_prune_mask,
                               sparsify_weight)
 from repro.models import api
 from repro.models.layers import is_axes_leaf
+# the jaxpr walk moved to repro.obs.census (DESIGN.md §15); re-exported
+# so the long-standing ``engine.count_eqns`` import path keeps working —
+# new code should import from ``repro.obs`` and use ``dispatch_census``
+from repro.obs.census import _subjaxprs, census_jaxpr, count_eqns  # noqa: F401
 
 
 @dataclasses.dataclass
@@ -115,34 +119,6 @@ def prune_params(params: Dict, cfg: ModelConfig) -> Dict:
     return walk(params)
 
 
-def _subjaxprs(v):
-    vals = v if isinstance(v, (list, tuple)) else [v]
-    for u in vals:
-        if hasattr(u, "jaxpr"):          # ClosedJaxpr
-            yield u.jaxpr
-        elif hasattr(u, "eqns"):         # raw Jaxpr
-            yield u
-
-
-def count_eqns(jaxpr, primitive: Optional[str] = None) -> int:
-    """Equations in a jaxpr, descending into control-flow bodies (scan /
-    cond / pjit / remat — each counted once, as dispatch *shape*, not
-    trip count) but treating a ``pallas_call`` as ONE dispatch: its
-    inner jaxpr is the kernel body, already fused on-chip. With
-    ``primitive`` set, count only equations of that primitive (e.g.
-    "pallas_call" → kernel dispatches)."""
-    n = 0
-    for eqn in jaxpr.eqns:
-        if primitive is None or eqn.primitive.name == primitive:
-            n += 1
-        if eqn.primitive.name == "pallas_call":
-            continue
-        for v in eqn.params.values():
-            for sub in _subjaxprs(v):
-                n += count_eqns(sub, primitive)
-    return n
-
-
 class Engine:
     def __init__(self, cfg: ModelConfig, params: Dict, max_len: int = 512):
         self.cfg = cfg
@@ -205,6 +181,24 @@ class Engine:
         every layer matmul stay Pallas-resident, DESIGN.md §11)."""
         return count_eqns(
             self._prefill_jaxpr(batch, chunk, block_size).jaxpr, primitive)
+
+    def dispatch_census(self, phase: str = "decode", batch: int = 1,
+                        chunk: int = 32, k: int = 4,
+                        block_size: int = 16) -> Dict[str, int]:
+        """Multi-primitive census of one serving step (the §15 unified
+        front door over the three ``*_eqn_count`` wrappers): phase ∈
+        {"decode", "prefill", "verify"} → {"total", "pallas_call",
+        "dot_general"} dispatch counts from the cached per-shape jaxpr.
+        For arbitrary callables use ``repro.obs.dispatch_census``."""
+        if phase == "decode":
+            jx = self._decode_jaxpr(batch)
+        elif phase == "prefill":
+            jx = self._prefill_jaxpr(batch, chunk, block_size)
+        elif phase == "verify":
+            jx = self._prefill_jaxpr(batch, k + 1, block_size)
+        else:
+            raise ValueError(f"unknown phase {phase!r}")
+        return census_jaxpr(jx)
 
     def verify_eqn_count(self, batch: int = 1, k: int = 4,
                          block_size: int = 16,

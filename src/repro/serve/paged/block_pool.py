@@ -159,19 +159,59 @@ class KVBlockPool:
         return new
 
     @property
-    def stats(self) -> Dict[str, int]:
+    def prefix_hit_rate(self) -> float:
+        """Fraction of ``match_prefix`` block probes that hit the cache
+        (0.0 before any probe). Derived from the resettable counters, so
+        ``reset_stats`` restarts it at 0."""
+        probes = self.prefix_hits + self.prefix_misses
+        return self.prefix_hits / probes if probes else 0.0
+
+    @property
+    def cached_blocks(self) -> int:
+        """Refcount-0 prefix blocks parked in the LRU cache."""
+        return len(self._cached)
+
+    @property
+    def fragmentation(self) -> float:
+        """Fraction of allocatable capacity that is *fragmented into the
+        prefix cache*: blocks counted in ``num_free`` but reclaimable
+        only by evicting a cached prefix (losing its future hits). 0.0 =
+        every free block is immediately usable; →1.0 = admission must
+        cannibalize the prefix cache. Instantaneous live state — NOT
+        reset by ``reset_stats``."""
+        return len(self._cached) / self.num_free if self.num_free else 0.0
+
+    def largest_admissible_tokens(self) -> int:
+        """Longest prompt a fresh single-stream request could admit
+        right now: its ceil(n/BS) prompt blocks plus one decode-headroom
+        block must fit in ``num_free`` (blocks are interchangeable, so
+        free capacity is the only constraint — the fragmentation cost is
+        the evictions ``alloc`` would charge, see ``fragmentation``)."""
+        return max(self.num_free - 1, 0) * self.block_size
+
+    @property
+    def stats(self) -> Dict[str, float]:
         return {"prefix_hits": self.prefix_hits,
                 "prefix_misses": self.prefix_misses,
+                "prefix_hit_rate": self.prefix_hit_rate,
                 "evictions": self.evictions,
                 "cow_copies": self.cow_copies,
                 "peak_in_use": self.peak_in_use,
-                "blocks_in_use": self.blocks_in_use}
+                "blocks_in_use": self.blocks_in_use,
+                "num_free": self.num_free,
+                "cached_blocks": self.cached_blocks,
+                "fragmentation": self.fragmentation,
+                "largest_admissible_tokens":
+                    self.largest_admissible_tokens()}
 
     def reset_stats(self) -> None:
         """Zero the counters and re-seat the high-water mark at the
         CURRENT occupancy (not zero — blocks still referenced by live
         requests are real usage the next arm inherits). Allocation and
-        prefix-cache state are untouched."""
+        prefix-cache state are untouched, so the live-state derived
+        stats (``fragmentation``, ``num_free``, ``cached_blocks``,
+        ``largest_admissible_tokens``) keep their values while the
+        counter-derived ``prefix_hit_rate`` restarts at 0."""
         self.prefix_hits = 0
         self.prefix_misses = 0
         self.evictions = 0

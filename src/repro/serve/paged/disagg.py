@@ -78,9 +78,14 @@ class DisaggScheduler:
                  slots: int = 4, max_len: int = 512, block_size: int = 16,
                  chunk: int = 32, spec: Optional[SpecConfig] = None,
                  prefill_kw: Optional[Dict] = None,
-                 decode_kw: Optional[Dict] = None):
+                 decode_kw: Optional[Dict] = None,
+                 trace=None, metrics=None):
+        # one trace/metrics pair is shared by BOTH pools (None → the
+        # env-gated defaults): a request's lifecycle spans one lane
+        # across the prefill root (ends "handoff") and the decode root
+        # (begins "adopt"), and the token counters stay globally exact
         base = dict(slots=slots, max_len=max_len, block_size=block_size,
-                    chunk=chunk)
+                    chunk=chunk, trace=trace, metrics=metrics)
         self.prefill = Scheduler(
             cfg, params, mesh=prefill_mesh, handoff=self._on_handoff,
             # prefill never decodes: headroom-block demands stay, but
@@ -101,6 +106,8 @@ class DisaggScheduler:
         self.pending.append(h)
         self.handoffs += 1
         self.handoff_bytes += h.nbytes
+        sched.metrics.counter("handoffs_total").inc()
+        sched.metrics.counter("handoff_bytes_total").inc(h.nbytes)
 
     # -- driver -----------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -137,6 +144,11 @@ class DisaggScheduler:
                 d._grow_or_preempt()
                 d._decode_tick()
         assert not self.pending and not self.prefill.queue, "stalled"
+        # the pools were driven by hand (their run() never executed), so
+        # fold pool stats here — labeled per pool, since both share one
+        # registry
+        self.prefill.fold_stats(labels={"pool": "prefill"})
+        self.decode.fold_stats(labels={"pool": "decode"})
         return self.decode.done
 
     # -- reporting ---------------------------------------------------------

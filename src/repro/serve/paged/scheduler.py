@@ -81,6 +81,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import time
 from typing import Callable, Deque, Dict, List, Optional, Union
 
 import jax
@@ -89,19 +90,26 @@ import numpy as np
 
 from collections import deque
 
+from repro import obs
 from repro.configs.base import ModelConfig
 from repro.models import api
 from repro.serve.batching import Request
 from repro.serve.paged.block_pool import KVBlockPool, prefix_hashes
 from repro.serve.spec_decode import SpecConfig, accept_length
 
+# slot/length-count histogram buckets (tick_active, accepted drafts)
+_COUNT_BUCKETS = (0.0, 1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64)
+
 
 @dataclasses.dataclass
 class _Entry:
     """Queue entry: the request plus tokens already emitted before a
-    preemption (greedy decode resumes exactly by prefilling them)."""
+    preemption (greedy decode resumes exactly by prefilling them).
+    ``replays`` counts preemptions survived — telemetry marks replayed
+    admissions so TTFT is only measured on the first attempt."""
     req: Request
     pre_out: List[int] = dataclasses.field(default_factory=list)
+    replays: int = 0
 
     @property
     def tokens(self) -> List[int]:
@@ -118,6 +126,7 @@ class _Seq:
     ticket: int                       # admission order (preemption prio)
     rank: int = 0                     # beam fork rank (0 = prefill root)
     out: List[int] = dataclasses.field(default_factory=list)
+    t_emit: float = 0.0               # last emit time (inter-token metric)
 
     @property
     def rid(self) -> int:
@@ -165,10 +174,20 @@ class Scheduler:
                  prefix_cache: bool = True,
                  spec: Optional[SpecConfig] = None,
                  mesh=None,
-                 handoff: Optional[Callable] = None):
+                 handoff: Optional[Callable] = None,
+                 trace: Optional[obs.Tracer] = None,
+                 metrics: Optional[obs.Metrics] = None):
         assert cfg.family in ("dense", "moe", "vlm"), cfg.family
         assert max_len % block_size == 0, (max_len, block_size)
         self.cfg, self.params = cfg, params
+        # telemetry (DESIGN.md §15): None → the env-gated process
+        # defaults (REPRO_TRACE / REPRO_METRICS; off = every call a
+        # no-op). Tests and benches pass their own enabled instances.
+        self.trace = trace if trace is not None else obs.default_tracer()
+        self.metrics = metrics if metrics is not None \
+            else obs.default_metrics()
+        self._req_span: Dict[int, int] = {}     # rid → open root handle
+        self._admit_t: Dict[int, float] = {}    # rid → admit time (TTFT)
         self.n_slots, self.max_len = slots, max_len
         self.block_size, self.chunk = block_size, chunk
         self.nbmax = max_len // block_size
@@ -282,6 +301,7 @@ class Scheduler:
             else:
                 self._grow_or_preempt()
                 self._decode_tick()
+        self.fold_stats()
         return self.done
 
     # -- stats / memory accounting ---------------------------------------
@@ -298,6 +318,18 @@ class Scheduler:
         self.spec_passes = 0
         self.spec_drafted = 0
         self.spec_accepted = 0
+
+    def fold_stats(self, labels: Optional[Dict] = None) -> None:
+        """Fold the pool's cumulative counters/derived stats into the
+        metrics registry as ``pool_*`` gauges (set, not incremented —
+        repeated folds are idempotent). ``run`` folds automatically at
+        drain; long-lived holders (DisaggScheduler, benches) call it
+        before exporting, passing ``labels`` (e.g. {"pool": "prefill"})
+        when several pools share one registry."""
+        if not self.metrics.enabled:
+            return
+        for k, v in self.pool.stats.items():
+            self.metrics.gauge(f"pool_{k}", labels).set(v)
 
     def data_shards(self) -> int:
         """How many devices each KV block is split across (the §13 "data"
@@ -399,6 +431,16 @@ class Scheduler:
             if nb > 1:
                 self._group_out[entry.req.rid] = [None] * nb
             self._ticket += 1
+            if self.trace.enabled or self.metrics.enabled:
+                rid = entry.req.rid
+                self._admit_t[rid] = time.perf_counter()
+                self._req_span[rid] = self.trace.begin(
+                    "request", tid=obs.request_tid(rid), rid=rid,
+                    prompt=n, n_best=nb, replays=entry.replays)
+                self.trace.event("admit", tid=obs.request_tid(rid))
+                self.metrics.counter("requests_admitted_total").inc()
+                if entry.replays:
+                    self.metrics.counter("requests_replayed_total").inc()
 
     # -- chunked prefill -------------------------------------------------
     def _bt_row(self, seq: Optional[_Seq]) -> np.ndarray:
@@ -426,10 +468,21 @@ class Scheduler:
             buf[0, :take] = toks[seq.pos:seq.pos + take]
             cache = {"k": self.kv["k"], "v": self.kv["v"],
                      "bt": self._layered_bt(self._bt_row(seq)[None])}
-            with self._ctx():
-                logits, cache = self._chunk(
-                    self.params, jnp.asarray(buf), cache,
-                    jnp.asarray([seq.pos], jnp.int32))
+            t0 = time.perf_counter()
+            with self.trace.span("prefill_chunk",
+                                 tid=obs.request_tid(seq.rid),
+                                 pos=seq.pos, take=take):
+                with self._ctx():
+                    logits, cache = self._chunk(
+                        self.params, jnp.asarray(buf), cache,
+                        jnp.asarray([seq.pos], jnp.int32))
+                if self.trace.enabled or self.metrics.enabled:
+                    # async dispatch: sync so the span/histogram cover
+                    # the device step, not just its launch
+                    jax.block_until_ready(logits)
+            self.metrics.histogram("prefill_chunk_seconds").observe(
+                time.perf_counter() - t0)
+            self.metrics.counter("prefill_chunks_total").inc()
             self.kv = {"k": cache["k"], "v": cache["v"]}
             seq.pos += take
             if seq.pos < n:
@@ -445,11 +498,15 @@ class Scheduler:
             nb = seq.entry.req.n_best
             if nb == 1:
                 first = int(jnp.argmax(logits[0, take - 1]))
+                self._note_first_token(seq, first)
                 if self.handoff is not None:
                     # disaggregated serving (§13): prefill's job ends
                     # here — the callback ships the KV payload + first
                     # token to the decode pool instead of decoding
+                    self.trace.event("handoff",
+                                     tid=obs.request_tid(seq.rid))
                     self.handoff(self, si, seq, first)
+                    self._end_req(seq.rid, "handoff")
                 else:
                     self._emit(si, first)
                 continue
@@ -457,6 +514,7 @@ class Scheduler:
             # token; tables are forked by refcount — the first decode
             # write into the shared partial tail block copy-on-writes it
             firsts = np.asarray(api.topn_tokens(logits[0, take - 1], nb))
+            self._note_first_token(seq, int(firsts[0]))
             holds = [hi for hi, s in enumerate(self.slots)
                      if isinstance(s, _Hold) and s.rid == seq.rid]
             assert len(holds) == nb - 1, (seq.rid, holds)
@@ -469,6 +527,28 @@ class Scheduler:
             self._emit(si, int(firsts[0]))
         if launches:
             self.tick_prefill.append(launches)
+
+    # -- telemetry helpers (DESIGN.md §15) -------------------------------
+    def _note_first_token(self, seq: _Seq, tok: int) -> None:
+        """TTFT mark at prompt completion. Replayed admissions emitted
+        their real first token before the preemption, so only the first
+        attempt observes TTFT (the replay's prompt-complete instant is
+        a recompute artifact, not a user-visible first token)."""
+        if not (self.trace.enabled or self.metrics.enabled):
+            return
+        if seq.entry.replays or seq.entry.pre_out:
+            return
+        t0 = self._admit_t.get(seq.rid)
+        if t0 is not None:
+            self.metrics.histogram("ttft_seconds").observe(
+                time.perf_counter() - t0)
+        self.trace.event("first_token", tid=obs.request_tid(seq.rid),
+                         token=tok)
+
+    def _end_req(self, rid: int, outcome: str) -> None:
+        """Close the request's lifecycle root span (no-op when tracing
+        is off or the root was already closed)."""
+        self.trace.end(self._req_span.pop(rid, 0), outcome=outcome)
 
     # -- decode growth / COW / preemption --------------------------------
     def _release_seq(self, seq: _Seq) -> None:
@@ -502,15 +582,22 @@ class Scheduler:
         nb = victim.entry.req.n_best
         for si in group:
             self._release_slot(si)
+        replays = victim.entry.replays + 1
         if nb > 1:
             # forks diverge per rank — replay the whole group from
             # scratch (deterministic top-n fork → identical re-run)
             self._group_out[rid] = [None] * nb
-            self.queue.appendleft(_Entry(victim.entry.req))
+            self.queue.appendleft(_Entry(victim.entry.req,
+                                         replays=replays))
         else:
             self.queue.appendleft(
                 _Entry(victim.entry.req,
-                       victim.entry.pre_out + victim.out))
+                       victim.entry.pre_out + victim.out,
+                       replays=replays))
+        self.trace.event("preempt", tid=obs.request_tid(rid))
+        self._end_req(rid, "preempt")
+        self.metrics.counter("requests_preempted_total").inc()
+        self._admit_t.pop(rid, None)
         return True
 
     def _copy_block(self, dst: int, src: int) -> None:
@@ -579,19 +666,26 @@ class Scheduler:
         if not live:
             return
         self.tick_active.append(len(live))
-        bt = np.zeros((self.n_slots, self.nbmax), np.int32)
-        pos = np.zeros(self.n_slots, np.int32)
-        for si in live:
-            bt[si] = self._bt_row(self.slots[si])
-            pos[si] = self.slots[si].pos
-        cache = {"k": self.kv["k"], "v": self.kv["v"],
-                 "bt": self._layered_bt(bt)}
-        with self._ctx():
-            logits, cache = self._decode(
-                self.params, jnp.asarray(self.tokens), cache,
-                jnp.asarray(pos, jnp.int32))
-        self.kv = {"k": cache["k"], "v": cache["v"]}
-        nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+        self.metrics.counter("decode_ticks_total").inc()
+        self.metrics.histogram("tick_active",
+                               buckets=_COUNT_BUCKETS).observe(len(live))
+        t0 = time.perf_counter()
+        with self.trace.span("decode_tick", n_active=len(live)):
+            bt = np.zeros((self.n_slots, self.nbmax), np.int32)
+            pos = np.zeros(self.n_slots, np.int32)
+            for si in live:
+                bt[si] = self._bt_row(self.slots[si])
+                pos[si] = self.slots[si].pos
+            cache = {"k": self.kv["k"], "v": self.kv["v"],
+                     "bt": self._layered_bt(bt)}
+            with self._ctx():
+                logits, cache = self._decode(
+                    self.params, jnp.asarray(self.tokens), cache,
+                    jnp.asarray(pos, jnp.int32))
+            self.kv = {"k": cache["k"], "v": cache["v"]}
+            nxt = np.asarray(jnp.argmax(logits, -1), np.int32)  # syncs
+        self.metrics.histogram("decode_tick_seconds").observe(
+            time.perf_counter() - t0)
         self.tick_emitted.append(len(live))
         for si in live:
             self.slots[si].pos += 1
@@ -613,31 +707,41 @@ class Scheduler:
         if not live:
             return
         self.tick_active.append(len(live))
-        drafts: Dict[int, List[int]] = {}
-        for si in live:
-            seq = self.slots[si]
-            # the draft sees everything emitted so far: prompt, replayed
-            # pre_out, and out (whose last element is the pending token)
-            drafts[si] = list(self.spec.draft.draft(
-                (seq.rid, seq.rank), seq.entry.tokens + seq.out, K))
-            assert len(drafts[si]) == K, (si, drafts[si])
-        buf = np.zeros((self.n_slots, K + 1), np.int32)
-        bt = np.zeros((self.n_slots, self.nbmax), np.int32)
-        pos = np.zeros(self.n_slots, np.int32)
-        for si in live:
-            seq = self.slots[si]
-            buf[si, 0] = self.tokens[si, 0]      # pending token
-            buf[si, 1:] = drafts[si]
-            bt[si] = self._bt_row(seq)
-            pos[si] = seq.pos
-        cache = {"k": self.kv["k"], "v": self.kv["v"],
-                 "bt": self._layered_bt(bt)}
-        with self._ctx():
-            logits, cache = self._verify(
-                self.params, jnp.asarray(buf), cache,
-                jnp.asarray(pos, jnp.int32))
-        self.kv = {"k": cache["k"], "v": cache["v"]}
-        tgt = np.asarray(jnp.argmax(logits, -1), np.int32)   # (B, K+1)
+        self.metrics.counter("verify_passes_total").inc(len(live))
+        self.metrics.histogram("tick_active",
+                               buckets=_COUNT_BUCKETS).observe(len(live))
+        t0 = time.perf_counter()
+        with self.trace.span("verify_pass", n_active=len(live)):
+            drafts: Dict[int, List[int]] = {}
+            with self.trace.span("draft", n_active=len(live)):
+                for si in live:
+                    seq = self.slots[si]
+                    # the draft sees everything emitted so far: prompt,
+                    # replayed pre_out, and out (whose last element is
+                    # the pending token)
+                    drafts[si] = list(self.spec.draft.draft(
+                        (seq.rid, seq.rank), seq.entry.tokens + seq.out,
+                        K))
+                    assert len(drafts[si]) == K, (si, drafts[si])
+            buf = np.zeros((self.n_slots, K + 1), np.int32)
+            bt = np.zeros((self.n_slots, self.nbmax), np.int32)
+            pos = np.zeros(self.n_slots, np.int32)
+            for si in live:
+                seq = self.slots[si]
+                buf[si, 0] = self.tokens[si, 0]      # pending token
+                buf[si, 1:] = drafts[si]
+                bt[si] = self._bt_row(seq)
+                pos[si] = seq.pos
+            cache = {"k": self.kv["k"], "v": self.kv["v"],
+                     "bt": self._layered_bt(bt)}
+            with self._ctx():
+                logits, cache = self._verify(
+                    self.params, jnp.asarray(buf), cache,
+                    jnp.asarray(pos, jnp.int32))
+            self.kv = {"k": cache["k"], "v": cache["v"]}
+            tgt = np.asarray(jnp.argmax(logits, -1), np.int32)  # (B, K+1)
+        self.metrics.histogram("verify_pass_seconds").observe(
+            time.perf_counter() - t0)
         emitted = 0
         for si in live:
             seq = self.slots[si]
@@ -645,6 +749,11 @@ class Scheduler:
             self.spec_passes += 1
             self.spec_drafted += K
             self.spec_accepted += a
+            self.metrics.histogram("accepted_draft_length",
+                                   buckets=_COUNT_BUCKETS).observe(a)
+            if a < K:
+                self.trace.event("rollback", tid=obs.request_tid(seq.rid),
+                                 accepted=a)
             # positions pos..pos+a now hold correct K/V ([pending,
             # accepted drafts]); the bonus token is emitted un-cached —
             # it is the next pass's pending token
@@ -714,23 +823,44 @@ class Scheduler:
         self.slots[si] = _Seq(entry=entry, table=table, n_shared=0,
                               pos=n, phase="decode", ticket=self._ticket)
         self._ticket += 1
+        if self.trace.enabled or self.metrics.enabled:
+            rid = entry.req.rid
+            self._req_span[rid] = self.trace.begin(
+                "request", tid=obs.request_tid(rid), rid=rid,
+                adopted=True, replays=entry.replays)
+            self.trace.event("adopt", tid=obs.request_tid(rid))
+            self.metrics.counter("adoptions_total").inc()
         self._emit(si, first_tok)
 
     def _emit(self, si: int, tok: int) -> None:
         seq = self.slots[si]
         seq.out.append(tok)
+        if self.metrics.enabled:
+            now = time.perf_counter()
+            self.metrics.counter("tokens_emitted_total").inc()
+            if seq.t_emit:
+                self.metrics.histogram("inter_token_seconds").observe(
+                    now - seq.t_emit)
+            seq.t_emit = now
         req = seq.entry.req
         if seq.emitted >= req.max_new or \
                 (req.eos is not None and tok == req.eos):
             out = seq.entry.pre_out + seq.out
+            finished = True
             if req.n_best > 1:
                 grp = self._group_out[req.rid]
                 grp[seq.rank] = out
-                if all(o is not None for o in grp):
+                finished = all(o is not None for o in grp)
+                if finished:
                     self.done[req.rid] = list(grp)
                     del self._group_out[req.rid]
             else:
                 self.done[req.rid] = out
+            if finished:
+                self.trace.event("finish", tid=obs.request_tid(req.rid))
+                self._end_req(req.rid, "finish")
+                self.metrics.counter("requests_finished_total").inc()
+                self._admit_t.pop(req.rid, None)
             self._release_slot(si)
         else:
             self.tokens[si, 0] = tok

@@ -101,8 +101,13 @@ class ModelDraft(DraftProvider):
     real token is re-decoded at its true position — identical K/V,
     exact logits."""
 
-    def __init__(self, cfg: ModelConfig, params, max_len: int = 512):
+    def __init__(self, cfg: ModelConfig, params, max_len: int = 512,
+                 trace=None):
+        from repro import obs
         self.cfg, self.params, self.max_len = cfg, params, max_len
+        # §15: draft-model work gets its own spans (nested inside the
+        # scheduler's "draft" span); None → the env-gated default tracer
+        self.trace = trace if trace is not None else obs.default_tracer()
         self._state: Dict[Hashable, Tuple[object, int, jax.Array]] = {}
         self._decode = jax.jit(
             lambda p, t, c, i: api.serve_step(p, cfg, t, c, i))
@@ -142,17 +147,18 @@ class ModelDraft(DraftProvider):
 
     def draft(self, key: Hashable, tokens: Sequence[int],
               k: int) -> List[int]:
-        cache, m, logits = self._sync(key, tokens)
-        out: List[int] = []
-        for j in range(k):
-            tok = int(jnp.argmax(logits[0]))
-            out.append(tok)
-            if j < k - 1:                       # last draft's K/V unused
-                logits, cache = self._decode(
-                    self.params, jnp.asarray([[tok]], jnp.int32),
-                    cache, jnp.asarray(m + j, jnp.int32))
-        # speculative K/V past m is rewritten on the next sync
-        self._state[key] = (cache, m, logits)
+        with self.trace.span("draft_model", k=k):
+            cache, m, logits = self._sync(key, tokens)
+            out: List[int] = []
+            for j in range(k):
+                tok = int(jnp.argmax(logits[0]))
+                out.append(tok)
+                if j < k - 1:                   # last draft's K/V unused
+                    logits, cache = self._decode(
+                        self.params, jnp.asarray([[tok]], jnp.int32),
+                        cache, jnp.asarray(m + j, jnp.int32))
+            # speculative K/V past m is rewritten on the next sync
+            self._state[key] = (cache, m, logits)
         return out
 
     def release(self, key: Hashable) -> None:

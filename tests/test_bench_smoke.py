@@ -1,8 +1,9 @@
 """Tier-1 exercise of the benchmark perf rows: the smoke gate must run
 the PR 3 fused rows, the PR 5 paged-serving rows, the PR 6
-chunked-prefill kernelization rows, and the PR 9 structured-sparsity
-rows end-to-end and write BENCH_pr3.json / BENCH_pr5.json /
-BENCH_pr6.json / BENCH_pr9.json."""
+chunked-prefill kernelization rows, the PR 9 structured-sparsity rows,
+and the PR 10 serving-telemetry rows end-to-end and write
+BENCH_pr3.json / BENCH_pr5.json / BENCH_pr6.json / BENCH_pr9.json /
+BENCH_pr10.json."""
 import json
 import os
 import subprocess
@@ -21,10 +22,12 @@ def test_bench_smoke_fast_rows(tmp_path):
     out5 = tmp_path / "BENCH_pr5.json"
     out6 = tmp_path / "BENCH_pr6.json"
     out9 = tmp_path / "BENCH_pr9.json"
+    out10 = tmp_path / "BENCH_pr10.json"
     env = dict(os.environ, PYTHONPATH="src", REPRO_BENCH_JSON=str(out),
                REPRO_BENCH_PR5_JSON=str(out5),
                REPRO_BENCH_PR6_JSON=str(out6),
-               REPRO_BENCH_PR9_JSON=str(out9))
+               REPRO_BENCH_PR9_JSON=str(out9),
+               REPRO_BENCH_PR10_JSON=str(out10))
     proc = subprocess.run(
         [sys.executable, "benchmarks/smoke.py", "--fast"], cwd=ROOT,
         capture_output=True, text=True, timeout=560, env=env)
@@ -81,3 +84,20 @@ def test_bench_smoke_fast_rows(tmp_path):
     assert rows9["sparse_bitexact_int"]["bit_exact"] == "True", rows9
     assert rows9["sparse_sched_sparse"]["tokens_identical"] == "True", rows9
     assert float(rows9["sparse_panel_bytes"]["reduction"]) == 0.25, rows9
+    # PR 10 rows: the telemetry-on run must export a valid trace with
+    # every request's lifecycle complete and no span left open, the
+    # token counters must reconcile EXACTLY (metric == scheduler ==
+    # Prometheus round-trip), and the drift report must produce the
+    # calibrated decode/prefill rows. The ≤5% overhead budget is
+    # asserted inside bench_obs itself (the row records the measurement;
+    # a budget blow-out fails the subprocess above).
+    rows10 = {r["name"]: _kv(r["derived"])
+              for r in json.loads(out10.read_text())["rows"]}
+    tv = rows10["obs_trace_valid"]
+    assert tv["valid"] == "True" and tv["open_spans"] == "0", tv
+    assert int(tv["lifecycles"]) > 0, tv
+    assert rows10["obs_tokens_reconcile"]["tokens_match"] == "True", rows10
+    assert "overhead_pct" in rows10["obs_sched_on"], rows10
+    for phase in ("decode", "prefill"):
+        assert f"obs_drift_{phase}" in rows10, rows10
+        assert "drift_pct" in rows10[f"obs_drift_{phase}"], rows10

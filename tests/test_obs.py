@@ -1,0 +1,349 @@
+"""Serving telemetry subsystem (DESIGN.md §15): span tracer + Chrome
+trace export, metrics registry + Prometheus text export, the unified
+dispatch census, pool-stat folding, and the modeled-vs-measured drift
+report — including span-stream well-formedness under the two lifecycle
+shapes that historically break tracers: preempted-then-replayed
+requests and disaggregated prefill→decode handoffs."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.configs import get_config
+from repro.models import api
+from repro.serve.batching import Request
+from repro.serve.engine import Engine, quantize_params
+from repro.serve.paged import Scheduler
+from repro.serve.paged.disagg import DisaggScheduler
+
+
+# ---------------------------------------------------------------------------
+# tracer / exporter units
+# ---------------------------------------------------------------------------
+
+def test_tracer_span_nesting_and_chrome_export(tmp_path):
+    tr = obs.Tracer(enabled=True)
+    h = tr.begin("request", tid=obs.request_tid(0), rid=0)
+    with tr.span("prefill_chunk", tid=obs.request_tid(0), pos=0):
+        pass
+    tr.event("first_token", tid=obs.request_tid(0))
+    with tr.span("decode_tick", n_active=1):      # scheduler lane
+        pass
+    assert tr.open_count == 1
+    tr.end(h, outcome="finish")
+    assert tr.open_count == 0
+
+    out = tmp_path / "trace.json"
+    doc = tr.export_chrome(out)
+    # the on-disk artifact is the same JSON document
+    assert json.loads(out.read_text()) == doc
+    counts = obs.validate_chrome_trace(doc)
+    assert counts == {"spans": 3, "events": 1, "lanes": 2}
+    lives = obs.request_lifecycles(doc)
+    assert len(lives[0]["roots"]) == 1
+    assert [c["name"] for c in lives[0]["children"]] == ["prefill_chunk"]
+    # lane metadata rows name the process and both lanes
+    meta = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+    names = {e["args"]["name"] for e in meta
+             if e["name"] == "thread_name"}
+    assert names == {"scheduler", "request 0"}
+
+
+def test_tracer_rejects_malformed_streams():
+    tr = obs.Tracer(enabled=True)
+    # partial overlap in one lane (not proper nesting) must be rejected
+    tr._record("a", 1, 0.0, 2.0, None)
+    tr._record("b", 1, 1.0, 3.0, None)
+    with pytest.raises(ValueError, match="overlap"):
+        obs.validate_chrome_trace(tr.export_chrome())
+    # a request lane without a completed root is an orphan stream
+    tr2 = obs.Tracer(enabled=True)
+    with tr2.span("prefill_chunk", tid=obs.request_tid(3)):
+        pass
+    with pytest.raises(ValueError, match="no completed root"):
+        obs.request_lifecycles(tr2.export_chrome())
+
+
+def test_tracer_disabled_is_noop():
+    tr = obs.Tracer(enabled=False)
+    # zero-cost: the disabled span is one shared nullcontext, no record
+    assert tr.span("x") is tr.span("y", tid=5, foo=1)
+    tr.event("e")
+    h = tr.begin("request", tid=1)
+    assert h == 0
+    tr.end(h)
+    assert tr.spans() == [] and tr.events() == [] and tr.open_count == 0
+
+
+def test_metrics_registry_and_prometheus_roundtrip(tmp_path):
+    m = obs.Metrics(enabled=True)
+    m.counter("tokens_emitted_total").inc(7)
+    m.gauge("pool_num_free", labels={"pool": "decode"}).set(3)
+    h = m.histogram("ttft_seconds")
+    for v in (0.01, 0.03):
+        h.observe(v)
+    assert m.value("tokens_emitted_total") == 7
+    assert h.count == 2 and h.mean == pytest.approx(0.02)
+
+    out = tmp_path / "metrics.prom"
+    text = m.export_prometheus(out)
+    assert out.read_text() == text
+    samples = obs.parse_prometheus(text)
+    assert samples["repro_tokens_emitted_total"] == 7
+    assert samples['repro_pool_num_free{pool="decode"}'] == 3
+    assert samples["repro_ttft_seconds_count"] == 2
+    assert samples["repro_ttft_seconds_sum"] == pytest.approx(0.04)
+    # cumulative buckets: every le-bound ≥ 0.03 saw both observations
+    assert samples['repro_ttft_seconds_bucket{le="+Inf"}'] == 2
+    assert "ttft" in m.summary()
+    m.reset()
+    assert m.get("tokens_emitted_total") is None
+
+    off = obs.Metrics(enabled=False)
+    # the disabled registry hands out one shared no-op instrument
+    assert off.counter("a") is off.histogram("b")
+    off.counter("a").inc()
+    assert off.value("a") == 0.0 and off.export_prometheus() == ""
+
+
+# ---------------------------------------------------------------------------
+# dispatch census unification (satellite: engine eqn counts → obs)
+# ---------------------------------------------------------------------------
+
+def _tiny_cfg():
+    return get_config("llama2-7b", smoke=True).replace(
+        dtype=jnp.float32, quant_mode="w4a8", num_layers=2, d_model=64,
+        num_heads=2, num_kv_heads=2, d_ff=128, vocab_size=256)
+
+
+def test_dispatch_census_unifies_eqn_counts():
+    cfg = _tiny_cfg()
+    params = quantize_params(api.init(jax.random.PRNGKey(0), cfg), cfg)
+    eng = Engine(cfg, params, max_len=64)
+    # the legacy wrappers and the unified census walk the SAME cached
+    # jaxpr, so the numbers must agree exactly
+    c = eng.dispatch_census("decode")
+    assert c["total"] == eng.decode_eqn_count()
+    assert c["pallas_call"] == eng.decode_eqn_count(primitive="pallas_call")
+    p = eng.dispatch_census("prefill", chunk=8, block_size=8)
+    assert p["total"] == eng.prefill_eqn_count(chunk=8, block_size=8)
+    # verify is structurally prefill at chunk = k+1 (DESIGN.md §12)
+    assert eng.dispatch_census("verify", k=7, block_size=8) == p
+    with pytest.raises(ValueError):
+        eng.dispatch_census("warmup")
+
+    # the standalone census works on arbitrary callables, and folding
+    # lands per-primitive gauges in the registry
+    cen = obs.dispatch_census(lambda a, b: a @ b + 1.0,
+                              jnp.ones((2, 3)), jnp.ones((3, 2)))
+    assert cen["dot_general"] == 1 and cen["total"] >= 2
+    m = obs.Metrics(enabled=True)
+    obs.fold_census(m, cen, phase="decode")
+    assert m.value("kernel_dispatches",
+                   {"phase": "decode", "primitive": "dot_general"}) == 1
+
+
+# ---------------------------------------------------------------------------
+# lifecycle well-formedness through the scheduler
+# ---------------------------------------------------------------------------
+
+def _instrumented_run(cfg, params, prompts, news, **kw):
+    trace = obs.Tracer(enabled=True)
+    metrics = obs.Metrics(enabled=True)
+    sch = Scheduler(cfg, params, trace=trace, metrics=metrics, **kw)
+    for i, (p, n) in enumerate(zip(prompts, news)):
+        sch.submit(Request(rid=i, prompt=p, max_new=n))
+    done = sch.run()
+    return done, sch, trace, metrics
+
+
+@pytest.mark.parametrize("arch,extra", [
+    ("llama2-7b", dict(num_layers=2)),
+    ("dbrx-132b", dict(capacity_factor=8.0)),     # MoE
+    ("qwen2-vl-2b", dict()),                      # VLM
+])
+def test_scheduler_trace_and_metrics_reconcile(rng, arch, extra):
+    """Acceptance: a paged run on every model family exports a valid
+    Chrome trace (one complete admit→finish lifecycle per request) and
+    Prometheus metrics whose token counters EXACTLY match the
+    scheduler's returned output."""
+    cfg = get_config(arch, smoke=True).replace(dtype=jnp.float32, **extra)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    prompts = [rng.integers(1, cfg.vocab_size, size=n).tolist()
+               for n in (6, 13, 9)]
+    news = [5, 4, 6]
+    done, sch, trace, metrics = _instrumented_run(
+        cfg, params, prompts, news, slots=2, max_len=64, block_size=8,
+        chunk=8)
+
+    assert trace.open_count == 0
+    doc = trace.export_chrome()
+    obs.validate_chrome_trace(doc)                # monotone + nested
+    lives = obs.request_lifecycles(doc)           # no orphans
+    assert set(lives) == set(done)
+    for rid, rec in lives.items():
+        assert len(rec["roots"]) == 1             # no preemption here
+        assert rec["roots"][0]["args"]["outcome"] == "finish"
+        ev = [e["name"] for e in rec["events"]]
+        assert ev.count("admit") == 1 and ev.count("finish") == 1
+        assert ev.count("first_token") == 1
+
+    toks = sum(len(v) for v in done.values())
+    assert metrics.value("tokens_emitted_total") == toks == sum(news)
+    assert metrics.value("requests_admitted_total") == len(prompts)
+    assert metrics.value("requests_finished_total") == len(prompts)
+    assert metrics.get("ttft_seconds").count == len(prompts)
+    assert metrics.value("decode_ticks_total") == \
+        metrics.get("decode_tick_seconds").count
+    # run() folds the pool gauges; the export round-trips them
+    samples = obs.parse_prometheus(metrics.export_prometheus())
+    assert samples["repro_tokens_emitted_total"] == toks
+    assert samples["repro_pool_peak_in_use"] == sch.pool.peak_in_use
+
+
+def test_preempted_then_replayed_request_spans(rng):
+    """Preemption closes the victim's root (outcome=preempt) and replay
+    opens a NEW root in the same lane — the exported stream must stay
+    well-formed (no orphans, monotone, nested) with TTFT counted only
+    for first attempts and token counts still exact."""
+    cfg = get_config("llama2-7b", smoke=True).replace(dtype=jnp.float32,
+                                                      num_layers=2)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    # 2 streams × (20-token prompt + 16 new) need 5 blocks each; the
+    # pool has 7 usable — decode growth must preempt the younger stream
+    prompts = [rng.integers(1, cfg.vocab_size, size=20).tolist()
+               for _ in range(2)]
+    news = [16, 16]
+    done, sch, trace, metrics = _instrumented_run(
+        cfg, params, prompts, news, slots=2, max_len=48, block_size=8,
+        num_blocks=8, chunk=8)
+
+    n_pre = int(metrics.value("requests_preempted_total"))
+    assert n_pre >= 1, "setup no longer forces preemption"
+    assert metrics.value("requests_replayed_total") == n_pre
+    assert trace.open_count == 0
+    doc = trace.export_chrome()
+    obs.validate_chrome_trace(doc)
+    lives = obs.request_lifecycles(doc)
+    roots = [r for rec in lives.values() for r in rec["roots"]]
+    assert len(roots) == len(prompts) + n_pre
+    outcomes = [r["args"]["outcome"] for r in roots]
+    assert outcomes.count("preempt") == n_pre
+    assert outcomes.count("finish") == len(prompts)
+    # the replayed admission carries its replay count on the root
+    assert max(r["args"]["replays"] for r in roots) == n_pre
+    # TTFT observed once per request (first attempt only, never the
+    # replayed re-prefill), and tokens stay exact through the replay
+    assert metrics.get("ttft_seconds").count == len(prompts)
+    assert metrics.value("tokens_emitted_total") == \
+        sum(len(v) for v in done.values()) == sum(news)
+
+
+def test_disagg_handoff_spans_one_lane(rng):
+    """DisaggScheduler shares one tracer/metrics pair across both pools:
+    a request's lane holds the prefill root (outcome=handoff) and the
+    decode root (adopted) back to back — no orphans, exact tokens, and
+    per-pool labeled gauges from both pools' folds."""
+    cfg = _tiny_cfg()
+    params = quantize_params(api.init(jax.random.PRNGKey(0), cfg), cfg)
+    prompts = [rng.integers(1, cfg.vocab_size, size=n).tolist()
+               for n in (6, 13, 9)]
+    news = [5, 4, 6]
+    trace = obs.Tracer(enabled=True)
+    metrics = obs.Metrics(enabled=True)
+    sch = DisaggScheduler(cfg, params, slots=2, max_len=64, block_size=8,
+                          chunk=8, trace=trace, metrics=metrics)
+    for i, (p, n) in enumerate(zip(prompts, news)):
+        sch.submit(Request(rid=i, prompt=p, max_new=n))
+    done = sch.run()
+
+    assert trace.open_count == 0
+    doc = trace.export_chrome()
+    obs.validate_chrome_trace(doc)
+    lives = obs.request_lifecycles(doc)
+    assert set(lives) == set(done) == set(range(len(prompts)))
+    for rec in lives.values():
+        outcomes = [r["args"]["outcome"] for r in rec["roots"]]
+        assert outcomes == ["handoff", "finish"]
+        ev = [e["name"] for e in rec["events"]]
+        assert "handoff" in ev and "adopt" in ev
+    assert metrics.value("handoffs_total") == len(prompts)
+    assert metrics.value("adoptions_total") == len(prompts)
+    assert metrics.value("handoff_bytes_total") == sch.handoff_bytes
+    assert metrics.value("tokens_emitted_total") == \
+        sum(len(v) for v in done.values()) == sum(news)
+    # both pools folded their gauges under distinct labels
+    samples = obs.parse_prometheus(metrics.export_prometheus())
+    for pool in ("prefill", "decode"):
+        assert f'repro_pool_num_free{{pool="{pool}"}}' in samples
+
+
+# ---------------------------------------------------------------------------
+# drift report
+# ---------------------------------------------------------------------------
+
+def test_drift_report_calibration_and_rows():
+    m = obs.Metrics(enabled=True)
+    # synthetic run: 4-active decode ticks + 8-token prefill chunks
+    for _ in range(5):
+        m.histogram("tick_active").observe(4)
+        m.histogram("decode_tick_seconds").observe(0.02)
+        m.histogram("prefill_chunk_seconds").observe(0.012)
+    rows = obs.drift_report(m, chunk=8, ctx=128)
+    by = {r["name"].split()[0]: r for r in rows}
+    assert set(by) == {"decode", "prefill"}
+    dec, pre = by["decode"], by["prefill"]
+    assert dec["measured"] == pytest.approx(0.005)
+    assert pre["measured"] == pytest.approx(0.0015)
+    # κ calibration makes two-row drift symmetric in log space: the
+    # residuals multiply out to exactly 1
+    assert dec["kappa"] == pytest.approx(pre["kappa"])
+    assert (1 + dec["drift_pct"] / 100) * (1 + pre["drift_pct"] / 100) \
+        == pytest.approx(1.0)
+    txt = obs.format_report(rows)
+    assert "kappa" in txt and "drift=" in txt
+    assert obs.format_report([]).startswith("(no drift rows")
+
+
+def test_drift_report_sparse_factor_row():
+    cfg = _tiny_cfg().replace(sparsity="2:4")
+    params = quantize_params(api.init(jax.random.PRNGKey(0), cfg), cfg)
+    m = obs.Metrics(enabled=True)
+    rows = obs.drift_report(m, params=params)
+    (row,) = [r for r in rows if r["name"].startswith("sparse")]
+    # 2:4 w4 bitmask storage: 0.5 value bytes + metadata ≈ the modeled
+    # 0.75 weight-stream factor, directly comparable (dimensionless)
+    assert row["modeled"] == pytest.approx(0.75)
+    assert abs(row["drift_pct"]) < 10.0
+    assert row["kappa"] is None
+    # dense params → no sparse leaves → the row disappears
+    dense = quantize_params(api.init(jax.random.PRNGKey(0), _tiny_cfg()),
+                            _tiny_cfg())
+    assert obs.drift_report(m, params=dense) == []
+
+
+# ---------------------------------------------------------------------------
+# env-gated defaults (REPRO_TRACE / REPRO_METRICS, default off)
+# ---------------------------------------------------------------------------
+
+def test_default_telemetry_env_gated(monkeypatch):
+    import repro.obs as o
+    monkeypatch.setattr(o, "_tracer", None)
+    monkeypatch.setattr(o, "_metrics", None)
+    monkeypatch.delenv("REPRO_TRACE", raising=False)
+    monkeypatch.delenv("REPRO_METRICS", raising=False)
+    assert not o.default_tracer().enabled
+    assert not o.default_metrics().enabled
+    monkeypatch.setattr(o, "_tracer", None)
+    monkeypatch.setattr(o, "_metrics", None)
+    monkeypatch.setenv("REPRO_TRACE", "1")
+    monkeypatch.setenv("REPRO_METRICS", "1")
+    assert o.default_tracer().enabled
+    assert o.default_metrics().enabled
+    # singletons: repeat calls hand back the same instance
+    assert o.default_tracer() is o.default_tracer()
+    monkeypatch.setattr(o, "_tracer", None)
+    monkeypatch.setattr(o, "_metrics", None)

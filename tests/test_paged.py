@@ -104,8 +104,12 @@ def test_pool_prefix_stats_counters():
     assert pool.match_prefix(toks[:4]) == [a, b]
     assert (pool.prefix_hits, pool.prefix_misses) == (5, 3)
     assert pool.stats == {"prefix_hits": 5, "prefix_misses": 3,
+                          "prefix_hit_rate": 5 / 8,
                           "evictions": 0, "cow_copies": 0,
-                          "peak_in_use": 2, "blocks_in_use": 2}
+                          "peak_in_use": 2, "blocks_in_use": 2,
+                          "num_free": 3, "cached_blocks": 0,
+                          "fragmentation": 0.0,
+                          "largest_admissible_tokens": 4}
 
 
 def test_pool_stats_reset_and_high_water():
@@ -124,6 +128,45 @@ def test_pool_stats_reset_and_high_water():
             pool.evictions, pool.cow_copies) == (0, 0, 0, 0)
     pool.alloc()
     assert pool.peak_in_use == 3
+
+
+def test_pool_fragmentation_and_reset_interaction():
+    """The live-state derived stats (fragmentation, cached_blocks,
+    largest_admissible_tokens) reflect CURRENT pool shape and survive
+    reset_stats(); the counter-derived prefix_hit_rate restarts at 0
+    (PR 10 §15 — the telemetry gauges fold pool.stats verbatim)."""
+    pool = KVBlockPool(num_blocks=6, block_size=4)    # 5 usable
+    toks = [3, 4, 5, 6, 7, 8, 9, 10]
+    h = prefix_hashes(toks, 4)
+    a, b = pool.alloc(), pool.alloc()
+    pool.register_prefix(a, h[0])
+    pool.register_prefix(b, h[1])
+    pool.release(a)
+    pool.release(b)                       # both parked in the LRU cache
+    assert pool.match_prefix(toks) == [a, b]
+    st = pool.stats
+    assert st["cached_blocks"] == 2 and st["num_free"] == 5
+    assert st["fragmentation"] == 2 / 5
+    # every free block counts toward admissibility (cached ones via
+    # eviction), minus the decode-headroom block
+    assert st["largest_admissible_tokens"] == 16
+    assert st["prefix_hit_rate"] == 1.0
+    pool.reset_stats()
+    st = pool.stats
+    # counters reset...
+    assert st["prefix_hits"] == 0 and st["prefix_hit_rate"] == 0.0
+    # ...but live-state stats persist: the cache didn't go anywhere
+    assert st["cached_blocks"] == 2 and st["fragmentation"] == 2 / 5
+    assert st["largest_admissible_tokens"] == 16
+    # allocating past the free list evicts from the cache → less
+    # fragmentation, same admissibility math on the shrunk num_free
+    for _ in range(4):
+        assert pool.alloc() is not None
+    st = pool.stats
+    assert st["cached_blocks"] == 1 and st["num_free"] == 1
+    assert st["fragmentation"] == 1.0     # only evictable capacity left
+    assert st["largest_admissible_tokens"] == 0
+    assert pool.evictions == 1            # post-reset counter counts again
 
 
 def test_pool_cow_fork_primitives():
